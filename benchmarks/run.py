@@ -1,0 +1,219 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the headline quantity the
+paper reports for that table/figure).  Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import math
+import time
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def bench_fig4_naive_pp_utilization():
+    """Fig 4: naive ping-pong macro utilization vs n_in (peaks at n_in=8)."""
+    from repro.core.analytical import PimConfig, naive_pp_macro_util
+
+    def run():
+        cfg = PimConfig()  # paper setup: 32x32 B macro, OU 4x8 B, s=4
+        curve = {n: naive_pp_macro_util(cfg.with_(n_in=n))
+                 for n in (1, 2, 4, 8, 16, 32, 64)}
+        assert abs(curve[8] - 1.0) < 1e-9
+        return curve
+
+    us, curve = _timed(run)
+    print(f"fig4_naive_pp_utilization,{us:.1f},peak@n_in=8:util={curve[8]:.3f}")
+
+
+def bench_fig6_design_phase():
+    """Fig 6: execution time + macro count of the three strategies across
+    t_rw:t_pim ratios at fixed off-chip bandwidth (DES-backed)."""
+    from repro.core.analytical import PimConfig
+    from repro.core.dse import fig6_sweep
+
+    def run():
+        cfg = PimConfig(band=128.0, s=4.0)
+        pts = fig6_sweep(cfg, ratios=[1 / 7, 1 / 3, 1.0, 3.0, 8.0],
+                         workload_rounds=24)
+        by = {(p.strategy, round(p.ratio_rw_over_pim, 3)): p for p in pts}
+        r17 = round(1 / 7, 3)
+        gpp_vs_naive = (by[("naive_pp", r17)].exec_time
+                        / by[("gpp", r17)].exec_time)
+        gpp_vs_insitu = (by[("insitu", r17)].exec_time
+                         / by[("gpp", r17)].exec_time)
+        return gpp_vs_naive, gpp_vs_insitu
+
+    us, (vs_naive, vs_insitu) = _timed(run)
+    print(f"fig6_design_phase,{us:.1f},ratio1:7_gpp_speedup_vs_naive={vs_naive:.2f}x_vs_insitu={vs_insitu:.2f}x")
+
+
+def bench_fig7_runtime_adaptation():
+    """Fig 7: performance retention under bandwidth reduction (paper headline:
+    5.38x over in-situ at band/64; our naive ratio reported alongside)."""
+    from repro.core.runtime_adapt import fig7_sweep
+
+    def run():
+        pts = fig7_sweep(reductions=(1, 2, 4, 8, 16, 32, 64), rounds=32)
+        by = {(p.strategy, p.band_reduction): p for p in pts}
+        g, i, n = (by[("gpp", 64.0)], by[("insitu", 64.0)],
+                   by[("naive_pp", 64.0)])
+        return g.perf_sim / i.perf_sim, g.perf_sim / n.perf_sim, g.bw_utilization
+
+    us, (vs_insitu, vs_naive, bwu) = _timed(run)
+    print(f"fig7_runtime_adaptation,{us:.1f},band/64_gpp_vs_insitu={vs_insitu:.2f}x_vs_naive={vs_naive:.2f}x_bw_util={bwu:.2f}")
+
+
+def bench_table2_theory_practice():
+    """Table II: theory vs integer practice across band 8..256 B/cycle."""
+    from repro.core.dse import table2
+
+    def run():
+        rows = table2()
+        worst = max(abs(r.perf_theory - r.perf_practice) / r.perf_theory
+                    for r in rows)
+        return rows, worst
+
+    us, (rows, worst) = _timed(run)
+    r8 = next(r for r in rows if r.band == 8)
+    print(f"table2_theory_practice,{us:.1f},band8_macros={r8.macros_practice}"
+          f"_perf={r8.perf_practice:.4f}_maxgap={worst:.3f}")
+
+
+def bench_headline_1_67x():
+    """§V headline: GPP >= 1.67x over naive ping-pong at full BW utilization
+    (checked across the mismatch range with the cycle-accurate DES)."""
+    import repro.core.analytical as ana
+    from repro.core import simulator as sim
+
+    def run():
+        best = 0.0
+        for ratio in (3.0, 5.0, 7.0):
+            c = ana.PimConfig(band=128.0, s=4.0).with_(
+                n_in=ratio * 32 / 4.0)
+            n_g = max(1, round(ana.num_macros(c, "gpp")))
+            n_n = max(1, round(ana.num_macros(c, "naive_pp")))
+            work = 32 * n_g
+            g = sim.simulate("gpp", c, n_g, math.ceil(work / n_g))
+            n = sim.simulate("naive_pp", c, n_n, math.ceil(work / n_n))
+            lat_g = g.total_cycles / (n_g * g.rounds)
+            lat_n = n.total_cycles / (n_n * n.rounds)
+            best = max(best, lat_n / lat_g)
+        return best
+
+    us, best = _timed(run)
+    print(f"headline_full_bw,{us:.1f},gpp_vs_naive_best={best:.2f}x_(paper:>=1.67x)")
+
+
+def bench_kernel_gpp_matmul():
+    """Kernel: interpret-mode correctness + auto ring-depth planning for
+    in-situ (G=1) / naive (G=2) / GPP (G>=3) schedules."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.ops import plan_ring_depth, streamed_matmul
+    from repro.kernels.ref import matmul_ref
+
+    def run():
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (8, 256), jnp.float32)
+        w = jax.random.normal(key, (256, 2048), jnp.float32)
+        for G in (1, 2, 4):
+            y = streamed_matmul(x, w, block_n=256, num_bufs=G, interpret=True)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(matmul_ref(x, w)),
+                                       rtol=1e-5, atol=1e-4)
+        return plan_ring_depth(8, 256, 256)
+
+    us, g_auto = _timed(run)
+    print(f"kernel_gpp_matmul,{us:.1f},allclose_G=1/2/4_auto_ring={g_auto}")
+
+
+def bench_kernel_cycle_model():
+    """Model the gpp_matmul kernel's three schedules with the paper's own
+    analytic machinery mapped to TPU constants (DESIGN.md §2.1): a (K, bn)
+    weight tile is the macro, HBM bandwidth is the off-chip bus, M rows are
+    n_in.  Reports the modeled steady-state speedup of GPP over in-situ for
+    a DMA-bound shape (small M) — the regime the auto-planner picks G=8."""
+    from repro.core.analytical import PimConfig
+    from repro.core import simulator as sim
+    from repro.kernels.ops import HBM_BYTES_PER_S, PEAK_FLOPS, plan_ring_depth
+
+    def run():
+        out = {}
+        for M in (8, 128, 512):   # DMA-bound .. balanced .. compute-bound
+            K, bn = 256, 256
+            tile_bytes = K * bn * 2
+            t_dma = tile_bytes / HBM_BYTES_PER_S
+            t_cmp = 2 * M * K * bn / PEAK_FLOPS
+            n_tiles = 16
+            serial = n_tiles * (t_dma + t_cmp)                 # in-situ (G=1)
+            pipelined = t_dma + t_cmp + (n_tiles - 1) * max(t_dma, t_cmp)
+            out[M] = (serial / pipelined, plan_ring_depth(M, K, bn))
+        return out
+
+    us, out = _timed(run)
+    parts = "_".join(f"M{m}:{s:.2f}x(G={g})" for m, (s, g) in out.items())
+    print(f"kernel_cycle_model,{us:.1f},insitu_to_pipelined_{parts}")
+
+
+def bench_streamer_modes():
+    """Distributed streamer: all four write/compute schedules agree
+    numerically (ZeRO-3 gathers restructured per the paper's schedule)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.streamer import StreamSettings, stream_layers
+
+    def run():
+        if len(jax.devices()) < 4:
+            return "skipped(<4 devices)"
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        L, D, F, B = 4, 32, 64, 8
+        key = jax.random.PRNGKey(0)
+        ws = {"w1": jax.random.normal(key, (L, D, F)) * 0.05,
+              "w2": jax.random.normal(key, (L, F, D)) * 0.05}
+        x = jax.random.normal(key, (B, D))
+        shard = {"w1": P("data", None), "w2": P(None, "data")}
+        full = {"w1": P(None, None), "w2": P(None, None)}
+
+        def apply_fn(c, w):
+            return c + jnp.tanh(c @ w["w1"]) @ w["w2"]
+
+        outs = {}
+        with jax.set_mesh(mesh):
+            for mode in ("resident", "insitu", "naive_pp", "gpp"):
+                f = jax.jit(lambda x, ws, m=mode: stream_layers(
+                    apply_fn, x, ws, L,
+                    settings=StreamSettings(mode=m, ring_depth=3),
+                    mesh=mesh, shard_specs=shard, full_specs=full))
+                outs[mode] = np.asarray(f(x, ws))
+        for m in ("insitu", "naive_pp", "gpp"):
+            np.testing.assert_allclose(outs[m], outs["resident"],
+                                       rtol=1e-5, atol=1e-5)
+        return "4modes_allclose"
+
+    us, res = _timed(run)
+    print(f"streamer_modes,{us:.1f},{res}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_fig4_naive_pp_utilization()
+    bench_fig6_design_phase()
+    bench_fig7_runtime_adaptation()
+    bench_table2_theory_practice()
+    bench_headline_1_67x()
+    bench_kernel_gpp_matmul()
+    bench_kernel_cycle_model()
+    bench_streamer_modes()
+
+
+if __name__ == "__main__":
+    main()

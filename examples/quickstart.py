@@ -1,0 +1,53 @@
+"""Quickstart: train a tiny model for a few steps, then generate from it.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import registry
+from repro.models import transformer as tf
+from repro.optim import adamw
+
+
+def main():
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    mesh = make_host_mesh(2, 2)
+    shape = ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train")
+
+    with jax.set_mesh(mesh):
+        bundle = make_train_step(cfg, mesh, shape)
+        params = jax.device_put(tf.init_params(cfg, jax.random.PRNGKey(0)),
+                                bundle.arg_shardings[0])
+        opt_state = jax.device_put(adamw.adamw_init(params),
+                                   bundle.arg_shardings[1])
+        pipe = TokenPipeline(cfg, DataConfig(batch=8, seq_len=64))
+        for step in range(10):
+            batch = {k: jax.device_put(v, bundle.arg_shardings[2][k])
+                     for k, v in pipe.batch_at(step).items()}
+            params, opt_state, metrics = bundle.fn(
+                params, opt_state, batch, jnp.asarray(step))
+            print(f"step {step}: loss {float(metrics['loss']):.4f}")
+
+        # generate a few tokens greedily
+        prompt = jnp.array([[1, 5, 42, 7]], jnp.int32)
+        logits, caches = tf.prefill(params, cfg, {"tokens": prompt}, max_len=32)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        for pos in range(prompt.shape[1], prompt.shape[1] + 8):
+            logits, caches = tf.decode_step(
+                params, cfg, jnp.array([[toks[-1]]], jnp.int32), caches, pos)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        print("generated:", toks)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, cells_for
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "cells_for"]

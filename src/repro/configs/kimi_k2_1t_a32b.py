@@ -1,0 +1,38 @@
+"""kimi-k2-1t-a32b [moe] — trillion-param MoE [arXiv:2501.kimi2; unverified].
+
+Assigned: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 (per-expert) vocab=163840,
+MoE 384e top-8.  Following DeepSeek lineage, layer 0 is dense (d_ff=18432,
+the published K2 dense-layer width); assigned d_ff=2048 is the routed-expert
+hidden.  The assignment pins GQA kv=8 (real K2 uses MLA — noted in DESIGN.md
+§Arch-applicability); head_dim=128 per the public config.
+
+This is the paper's flagship workload: 1T total / 32B active params — the
+expert weights *cannot* be resident and must stream — the exact
+concurrent write/compute regime of the paper.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    d_model=7168,
+    num_layers=61,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=163840,
+    pattern=("moe",),
+    prefix_pattern=("dense",),
+    num_experts=384,
+    experts_per_token=8,
+    num_shared_experts=1,
+    moe_d_ff=2048,
+    optimizer="adafactor",  # AdamW f32 moments (8 TB) cannot fit a 4 TB pod
+)
+
+SMOKE = CONFIG.with_(
+    d_model=64, num_layers=3, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, num_experts=8, experts_per_token=2,
+    moe_d_ff=32,
+)

@@ -1,0 +1,28 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+Assigned: 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.  Every
+5th layer cross-attends to 1600 patch embeddings supplied by the stubbed
+vision tower (input_specs()); the other 32 are standard GQA self-attention.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    d_model=4096,
+    num_layers=40,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    pattern=("dense", "dense", "dense", "dense", "cross"),
+    encoder_tokens=1600,
+    rope_theta=5e5,
+)
+
+SMOKE = CONFIG.with_(
+    d_model=64, num_layers=10, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512, encoder_tokens=8,
+)

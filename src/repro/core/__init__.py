@@ -1,0 +1,25 @@
+"""Generalized ping-pong (GPP) — the paper's contribution.
+
+Layers:
+  analytical     closed-form model (paper Eqs 1-9)
+  schedule       schedule IR + in-situ / naive ping-pong / GPP builders
+  simulator      cycle-accurate discrete-event simulation (Verilog stand-in)
+  dse            design-phase exploration (Fig 6, Table II)
+  runtime_adapt  runtime bandwidth adaptation (Fig 7)
+  streamer       the JAX realization: GPP weight-streaming executors
+"""
+from repro.core.analytical import PimConfig, STRATEGIES
+from repro.core.schedule import Schedule, ScheduleOp, StreamPlan, build, plan_stream
+from repro.core.simulator import SimResult, simulate
+
+__all__ = [
+    "PimConfig",
+    "STRATEGIES",
+    "Schedule",
+    "ScheduleOp",
+    "StreamPlan",
+    "build",
+    "plan_stream",
+    "SimResult",
+    "simulate",
+]

@@ -1,0 +1,248 @@
+"""Schedule IR and builders for the three concurrent write/compute strategies.
+
+A schedule is a list of `ScheduleOp`s — (macro, kind, start, dur, bytes) — the
+TPU-idiomatic equivalent of the paper's PUMA-derived assembly: the simulator
+executes it, tests assert its properties (flat bandwidth, zero idle), and the
+JAX streamer (`core/streamer.py`) consumes the same planner to set its ring
+depth / chunking.
+
+Builders are *idealized* (no bandwidth arbiter): they place ops where the
+strategy intends them.  `repro.core.simulator` plays the same strategies
+against a real shared-bus arbiter and reports what actually happens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+from repro.core.analytical import PimConfig
+
+KIND_REWRITE = "rewrite"
+KIND_COMPUTE = "compute"
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleOp:
+    macro: int
+    kind: str          # "rewrite" | "compute"
+    start: float       # cycles
+    dur: float         # cycles
+    nbytes: float      # off-chip bytes moved (0 for compute)
+
+    @property
+    def end(self) -> float:
+        return self.start + self.dur
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    ops: tuple[ScheduleOp, ...]
+    num_macros: int
+    cfg: PimConfig
+    strategy: str
+
+    @property
+    def makespan(self) -> float:
+        return max((op.end for op in self.ops), default=0.0)
+
+    def bandwidth_profile(self, resolution: int = 2048) -> "list[float]":
+        """Off-chip bandwidth demand sampled over the makespan [B/cycle]."""
+        span = self.makespan
+        if span <= 0:
+            return []
+        out = [0.0] * resolution
+        dt = span / resolution
+        for op in self.ops:
+            if op.kind != KIND_REWRITE or op.dur <= 0:
+                continue
+            rate = op.nbytes / op.dur
+            i0 = int(op.start / dt)
+            i1 = min(resolution - 1, int((op.end - 1e-9) / dt))
+            for i in range(i0, i1 + 1):
+                lo = max(op.start, i * dt)
+                hi = min(op.end, (i + 1) * dt)
+                out[i] += rate * max(0.0, hi - lo) / dt
+        return out
+
+    def peak_bandwidth(self) -> float:
+        """Exact peak instantaneous bandwidth demand [B/cycle]."""
+        events: list[tuple[float, float]] = []
+        for op in self.ops:
+            if op.kind != KIND_REWRITE or op.dur <= 0:
+                continue
+            rate = op.nbytes / op.dur
+            events.append((op.start, rate))
+            events.append((op.end, -rate))
+        events.sort()
+        cur = peak = 0.0
+        for _, delta in events:
+            cur += delta
+            peak = max(peak, cur)
+        return peak
+
+    def avg_bandwidth(self) -> float:
+        total = sum(op.nbytes for op in self.ops if op.kind == KIND_REWRITE)
+        return total / self.makespan if self.makespan else 0.0
+
+    def bandwidth_idle_fraction(self) -> float:
+        """Fraction of the makespan with zero rewrite traffic in flight."""
+        span = self.makespan
+        if span <= 0:
+            return 0.0
+        ivals = sorted(
+            (op.start, op.end) for op in self.ops if op.kind == KIND_REWRITE
+        )
+        busy = 0.0
+        cur_s = cur_e = None
+        for s, e in ivals:
+            if cur_s is None:
+                cur_s, cur_e = s, e
+            elif s <= cur_e:
+                cur_e = max(cur_e, e)
+            else:
+                busy += cur_e - cur_s
+                cur_s, cur_e = s, e
+        if cur_s is not None:
+            busy += cur_e - cur_s
+        return 1.0 - busy / span
+
+    def macro_utilization(self) -> float:
+        """Mean fraction of the makespan each macro spends busy (either op)."""
+        span = self.makespan
+        if span <= 0:
+            return 0.0
+        busy = sum(op.dur for op in self.ops)
+        return busy / (span * self.num_macros)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def gpp_group_count(cfg: PimConfig) -> int:
+    """Number of stagger groups G = round((t_pim + t_rw) / t_rw), >= 2.
+
+    With G groups, group k starts its rewrite at k*(t_pim+t_rw)/G; exactly
+    num/G macros rewrite at any instant when the ratio divides evenly.
+    """
+    tp, tr = cfg.time_pim, cfg.time_rewrite
+    return max(2, round((tp + tr) / tr))
+
+
+def gpp_concurrent_rewriters(cfg: PimConfig, num_macros: int) -> float:
+    """Average number of simultaneously-rewriting macros under GPP."""
+    tp, tr = cfg.time_pim, cfg.time_rewrite
+    return num_macros * tr / (tp + tr)
+
+
+def build_insitu(cfg: PimConfig, num_macros: int, rounds: int) -> Schedule:
+    """All macros rewrite together, then all compute together."""
+    tp, tr = cfg.time_pim, cfg.time_rewrite
+    ops = []
+    for r in range(rounds):
+        t0 = r * (tp + tr)
+        for m in range(num_macros):
+            ops.append(ScheduleOp(m, KIND_REWRITE, t0, tr, cfg.size_macro))
+            ops.append(ScheduleOp(m, KIND_COMPUTE, t0 + tr, tp, 0.0))
+    return Schedule(tuple(ops), num_macros, cfg, "insitu")
+
+
+def build_naive_pp(cfg: PimConfig, num_macros: int, rounds: int) -> Schedule:
+    """Two synchronized banks: one computes GeMM n while the other rewrites
+    weights for GeMM n+1; banks swap when BOTH finish (paper Fig 3b)."""
+    tp, tr = cfg.time_pim, cfg.time_rewrite
+    period = max(tp, tr)
+    half = num_macros // 2
+    bank = [0] * half + [1] * (num_macros - half)
+    ops = []
+    # phase p: bank (p % 2) computes round p, bank ((p+1) % 2) rewrites
+    # weights for round p+1.  Warm-up: bank0 rewrites round 0 first.
+    for m in range(num_macros):
+        if bank[m] == 0:
+            ops.append(ScheduleOp(m, KIND_REWRITE, 0.0, tr, cfg.size_macro))
+    t0 = tr  # steady phases start after warm-up fill
+    for p in range(rounds):
+        comp_bank = p % 2
+        for m in range(num_macros):
+            if bank[m] == comp_bank:
+                ops.append(ScheduleOp(m, KIND_COMPUTE, t0, tp, 0.0))
+            elif p + 1 < rounds:
+                ops.append(ScheduleOp(m, KIND_REWRITE, t0, tr, cfg.size_macro))
+        t0 += period
+    return Schedule(tuple(ops), num_macros, cfg, "naive_pp")
+
+
+def build_gpp(cfg: PimConfig, num_macros: int, rounds: int) -> Schedule:
+    """Generalized ping-pong: macro groups stagger rewrite starts so that
+    off-chip traffic is flat and no macro ever idles (paper Fig 3c)."""
+    tp, tr = cfg.time_pim, cfg.time_rewrite
+    period = tp + tr
+    groups = gpp_group_count(cfg)
+    ops = []
+    for m in range(num_macros):
+        g = m % groups
+        offset = g * period / groups
+        for r in range(rounds):
+            t0 = offset + r * period
+            ops.append(ScheduleOp(m, KIND_REWRITE, t0, tr, cfg.size_macro))
+            ops.append(ScheduleOp(m, KIND_COMPUTE, t0 + tr, tp, 0.0))
+    return Schedule(tuple(ops), num_macros, cfg, "gpp")
+
+
+def build(strategy: str, cfg: PimConfig, num_macros: int, rounds: int) -> Schedule:
+    return {
+        "insitu": build_insitu,
+        "naive_pp": build_naive_pp,
+        "gpp": build_gpp,
+    }[strategy](cfg, num_macros, rounds)
+
+
+# ---------------------------------------------------------------------------
+# Planner interface consumed by the JAX streamer (core/streamer.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """GPP plan for streaming L weight blocks through a compute pipeline.
+
+    ring_depth   number of weight buffers held concurrently (paper: groups
+                 rewriting + the one computing).
+    chunks       chunks each block's transfer is split into, issued one per
+                 compute slot, so link demand is flat.
+    t_compute    per-block compute time estimate [s]
+    t_transfer   per-block transfer time estimate [s]
+    """
+
+    ring_depth: int
+    chunks: int
+    t_compute: float
+    t_transfer: float
+
+    @property
+    def ratio(self) -> float:
+        return self.t_compute / self.t_transfer if self.t_transfer else math.inf
+
+
+def plan_stream(
+    *,
+    block_bytes: float,
+    compute_flops: float,
+    flops_per_s: float,
+    transfer_bytes_per_s: float,
+    max_ring: int = 8,
+) -> StreamPlan:
+    """Plan ring depth & chunking for streaming weight blocks.
+
+    TPU mapping of Eq 4: a block is a "macro", transfer is the "rewrite",
+    the per-block matmul is the "compute".  ring = ceil(t_tr/t_cmp)+1 buffers
+    keep compute from ever waiting; `chunks` splits each transfer so each
+    compute slot carries ~1/ratio of a block (flat bandwidth).
+    """
+    t_cmp = compute_flops / flops_per_s
+    t_tr = block_bytes / transfer_bytes_per_s
+    if t_cmp <= 0:
+        return StreamPlan(2, 1, t_cmp, t_tr)
+    ring = min(max_ring, max(2, math.ceil(t_tr / t_cmp) + 1))
+    chunks = max(1, round(t_cmp / t_tr)) if t_tr > 0 else 1
+    return StreamPlan(ring, chunks, t_cmp, t_tr)

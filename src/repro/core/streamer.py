@@ -1,0 +1,231 @@
+"""JAX realization of generalized ping-pong: streamed layer execution.
+
+The pod-scale mapping of the paper (DESIGN.md §2.2): layer weights are
+FSDP-sharded over the `data` mesh axis ("off-chip"), and must be gathered
+("rewritten") into replicated form before a layer's GeMMs ("compute").  The
+four modes mirror the paper's strategies:
+
+  resident   weights already replicated — no streaming (baseline TP/DP)
+  insitu     gather layer i, then compute layer i: the gather is on the
+             critical path every step (bursty + stalls)
+  naive_pp   double-buffer: gather layer i+1 (whole) while computing layer i
+             — classic FSDP prefetch; bursty when t_gather ≉ t_compute
+  gpp        ring of G buffers; each step chunk-gathers 1/(G-1) of each of
+             the next G-1 layers, so per-step collective bytes are flat at
+             exactly one layer and compute never waits even when
+             t_gather > t_compute
+
+The ring schedule: layer j's bytes arrive during steps j-(G-1) … j-1; at
+step i we fetch chunk (G-1-k) of layer i+k for k = 1..G-1.  Chunk indices
+are static; only the layer index is dynamic (lax.dynamic_index_in_dim).
+Backward of the gather is a reduce-scatter, so `stream_layers` is
+differentiable and training gets ZeRO-3 semantics for free.
+
+Ring depth comes from `repro.core.schedule.plan_stream` — the same planner
+validated against the paper's analytic model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.schedule import StreamPlan, plan_stream
+
+Pytree = Any
+
+MODES = ("resident", "insitu", "naive_pp", "gpp")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSettings:
+    """Per-model streaming configuration (part of the arch config)."""
+
+    mode: str = "resident"
+    ring_depth: int = 4          # G: buffers held (gpp); >= 2
+    chunk_dim: int = -1          # which dim of each leaf to chunk-gather along
+    fsdp_axis: str = "data"      # mesh axis the weights are sharded over
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if self.ring_depth < 2:
+            raise ValueError("ring_depth must be >= 2")
+
+
+def _constrain(tree: Pytree, specs: Pytree, mesh: Mesh | None) -> Pytree:
+    """with_sharding_constraint that tolerates mesh-less (single-device) runs."""
+    if mesh is None or mesh.empty:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        tree,
+        specs,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def _layer(ws: Pytree, i) -> Pytree:
+    """Dynamic-index layer i out of leading-L stacked params."""
+    return jax.tree.map(lambda w: jax.lax.dynamic_index_in_dim(w, i, 0, keepdims=False), ws)
+
+
+def _chunk_bounds(dim_size: int, chunks: int, c: int) -> tuple[int, int]:
+    """Static [lo, hi) bounds of chunk c (last chunk absorbs the remainder)."""
+    base = dim_size // chunks
+    lo = c * base
+    hi = dim_size if c == chunks - 1 else lo + base
+    return lo, hi
+
+
+def _take_chunk(leaf: jnp.ndarray, chunk_dim: int, chunks: int, c: int) -> jnp.ndarray:
+    d = chunk_dim % leaf.ndim
+    lo, hi = _chunk_bounds(leaf.shape[d], chunks, c)
+    idx = [slice(None)] * leaf.ndim
+    idx[d] = slice(lo, hi)
+    return leaf[tuple(idx)]
+
+
+def _put_chunk(buf: jnp.ndarray, chunk: jnp.ndarray, chunk_dim: int, chunks: int, c: int) -> jnp.ndarray:
+    d = chunk_dim % buf.ndim
+    lo, _ = _chunk_bounds(buf.shape[d], chunks, c)
+    start = [0] * buf.ndim
+    start[d] = lo
+    return jax.lax.dynamic_update_slice(buf, chunk.astype(buf.dtype), tuple(start))
+
+
+def stream_layers(
+    apply_fn: Callable[[Pytree, Pytree], Pytree],
+    carry_init: Pytree,
+    stacked_ws: Pytree,
+    num_layers: int,
+    *,
+    settings: StreamSettings,
+    mesh: Mesh | None,
+    shard_specs: Pytree,
+    full_specs: Pytree,
+) -> Pytree:
+    """Run `carry = apply_fn(carry, w_l)` over L stacked layers with the
+    selected write/compute schedule.
+
+    stacked_ws   pytree whose leaves have leading dim L, FSDP-sharded per
+                 `shard_specs` (PartitionSpec for ONE layer, without the L dim)
+    shard_specs / full_specs
+                 per-leaf PartitionSpec before/after the gather; the gather is
+                 `with_sharding_constraint(w, full_spec)` (XLA emits the
+                 all-gather over the fsdp axis, reduce-scatter in backward)
+    """
+    mode = settings.mode
+    lspec = jax.tree.map(lambda s: P(*(None, *s)), shard_specs)  # with L dim
+
+    def gather(w_layer: Pytree) -> Pytree:
+        return _constrain(w_layer, full_specs, mesh)
+
+    if mode == "resident":
+        def body(c, w):
+            return apply_fn(c, w), None
+        carry, _ = jax.lax.scan(body, carry_init, stacked_ws)
+        return carry
+
+    if mode == "insitu":
+        def body(c, w):
+            return apply_fn(c, gather(w)), None
+        carry, _ = jax.lax.scan(body, carry_init, stacked_ws)
+        return carry
+
+    if mode == "naive_pp":
+        # carry holds the gathered weights of the layer about to run.
+        w0 = gather(_layer(stacked_ws, 0))
+
+        def body(state, i):
+            c, w_cur = state
+            # issue next layer's (whole-layer) gather, then compute: XLA's
+            # latency-hiding scheduler may overlap them — the naive ping-pong.
+            w_next = gather(_layer(stacked_ws, jnp.minimum(i + 1, num_layers - 1)))
+            c = apply_fn(c, w_cur)
+            return (c, w_next), None
+
+        (carry, _w), _ = jax.lax.scan(body, (carry_init, w0), jnp.arange(num_layers))
+        return carry
+
+    # ---- gpp ----
+    G = max(2, min(settings.ring_depth, num_layers))
+    chunks = max(1, G - 1)
+    cd = settings.chunk_dim
+
+    def gather_chunk(w_layer: Pytree, c: int) -> Pytree:
+        chunk = jax.tree.map(lambda w: _take_chunk(w, cd, chunks, c), w_layer)
+        spec_chunk = full_specs  # chunk keeps the gathered layout
+        return _constrain(chunk, spec_chunk, mesh)
+
+    # ring: G fully-materialized (gathered-layout) buffers.
+    def zeros_like_full(w_layer: Pytree) -> Pytree:
+        return jax.tree.map(jnp.zeros_like, w_layer)
+
+    proto = gather(_layer(stacked_ws, 0))
+    ring = jax.tree.map(
+        lambda w: jnp.broadcast_to(jnp.zeros_like(w), (G, *w.shape)).copy(), proto
+    )
+
+    def ring_put_layer(ring, slot, w_full):
+        return jax.tree.map(
+            lambda r, w: jax.lax.dynamic_update_index_in_dim(r, w.astype(r.dtype), slot, 0),
+            ring,
+            w_full,
+        )
+
+    def ring_put_chunk(ring, slot, w_chunk, c):
+        def upd(r, ch):
+            buf = jax.lax.dynamic_index_in_dim(r, slot, 0, keepdims=False)
+            buf = _put_chunk(buf, ch, cd, chunks, c)
+            return jax.lax.dynamic_update_index_in_dim(r, buf, slot, 0)
+        return jax.tree.map(upd, ring, w_chunk)
+
+    # prologue: fully gather layers 0..G-2 into slots 0..G-2 (pipeline fill —
+    # the paper's ramp).
+    for j in range(G - 1):
+        ring = ring_put_layer(ring, j, gather(_layer(stacked_ws, min(j, num_layers - 1))))
+
+    def body(state, i):
+        c, ring = state
+        slot = jax.lax.rem(i, G)
+        w_use = jax.tree.map(
+            lambda r: jax.lax.dynamic_index_in_dim(r, slot, 0, keepdims=False), ring
+        )
+        # chunk-gather the window: layer i+k gets chunk (G-1-k), k = 1..G-1.
+        for k in range(1, G):
+            j = jnp.minimum(i + k, num_layers - 1)
+            ch = gather_chunk(_layer(stacked_ws, j), chunks - k if chunks > 1 else 0)
+            ring = ring_put_chunk(ring, jax.lax.rem(i + k, G), ch, chunks - k if chunks > 1 else 0)
+        c = apply_fn(c, w_use)
+        return (c, ring), None
+
+    (carry, _ring), _ = jax.lax.scan(body, (carry_init, ring), jnp.arange(num_layers))
+    return carry
+
+
+def plan_for_layer(
+    *,
+    layer_bytes: float,
+    layer_flops: float,
+    mesh: Mesh | None,
+    settings: StreamSettings,
+    flops_per_s: float = 197e12,
+    ici_bytes_per_s: float = 50e9,
+) -> StreamPlan:
+    """Derive the GPP plan for one layer on the current mesh: the all-gather
+    moves (n-1)/n of layer_bytes across the fsdp axis ring of n devices."""
+    n = mesh.shape[settings.fsdp_axis] if mesh is not None and not mesh.empty else 1
+    gather_bytes = layer_bytes * max(0, n - 1) / max(1, n)
+    return plan_stream(
+        block_bytes=gather_bytes,
+        compute_flops=layer_flops,
+        flops_per_s=flops_per_s,
+        transfer_bytes_per_s=ici_bytes_per_s,
+        max_ring=8,
+    )

@@ -1,0 +1,181 @@
+"""Generalized ping-pong streaming matmul — the paper's GeMM engine on TPU.
+
+y[M, N] = x[M, K] @ W[K, N] where W is too large to be VMEM-resident and
+streams from HBM ("off-chip") while the MXU computes — the PIM
+concurrent-write/compute problem mapped to the TPU memory hierarchy
+(DESIGN.md §2.1):
+
+  PIM macro           ->  one (K, bn) weight tile resident in VMEM
+  weight rewrite      ->  async HBM->VMEM DMA into a ring slot
+  n_in input vectors  ->  the M rows matmul'd against the resident tile
+  off-chip bandwidth  ->  HBM DMA bandwidth
+
+Strategies (selected by `num_bufs`):
+  num_bufs == 1   in-situ: DMA tile j, wait, compute tile j (bursty, stalls)
+  num_bufs == 2   naive ping-pong: classic double buffering — whole-tile DMA
+                  for j+1 issued while computing j
+  num_bufs >= 3   generalized ping-pong: ring of G buffers; while computing
+                  tile j, issue ONE CHUNK (1/(G-1) of a tile) for each of the
+                  G-1 upcoming tiles, so DMA traffic is flat at exactly one
+                  tile per compute step and the MXU never waits even when
+                  t_dma > t_compute.
+
+The chunk schedule is the same one validated against the paper's analytic
+model: tile t's chunk c is issued at grid step t-(G-1)+c (clamped to 0 —
+pipeline-fill ramp), i.e. at step j we issue chunk (G-1-k) of tile j+k.
+
+Grid steps on TPU run sequentially on one core, so DMA state (semaphore
+signals) persists across steps — the standard Pallas manual-multibuffering
+pattern.  Chunks split the K (sublane) dimension so each DMA keeps full
+128-lane rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_bounds(K: int, chunks: int, c: int) -> tuple[int, int]:
+    base = K // chunks
+    lo = c * base
+    hi = K if c == chunks - 1 else lo + base
+    return lo, hi
+
+
+def _gpp_kernel(x_ref, w_hbm, y_ref, ring, sems, *, num_bufs: int, bn: int, K: int,
+                out_dtype):
+    """Pallas kernel body; grid = (num_tiles,) over N column-tiles of W."""
+    j = pl.program_id(0)
+    nt = pl.num_programs(0)
+    G = num_bufs
+    C = max(1, G - 1)  # chunks per tile
+
+    def start_chunk(tile, c: int):
+        """Issue async DMA of chunk c of weight tile `tile` into its slot."""
+        lo, hi = _chunk_bounds(K, C, c)
+        slot = jax.lax.rem(tile, G)
+        copy = pltpu.make_async_copy(
+            w_hbm.at[pl.ds(lo, hi - lo), pl.ds(tile * bn, bn)],
+            ring.at[slot, pl.ds(lo, hi - lo), :],
+            sems.at[slot],
+        )
+        copy.start()
+
+    def wait_chunk(tile, c: int):
+        lo, hi = _chunk_bounds(K, C, c)
+        slot = jax.lax.rem(tile, G)
+        pltpu.make_async_copy(
+            w_hbm.at[pl.ds(lo, hi - lo), pl.ds(tile * bn, bn)],
+            ring.at[slot, pl.ds(lo, hi - lo), :],
+            sems.at[slot],
+        ).wait()
+
+    if G == 1:
+        # in-situ: fetch-then-compute every step, nothing in flight.
+        start_chunk(j, 0)
+        wait_chunk(j, 0)
+    else:
+        # Chunk schedule: tile t's chunk c is issued at step t-C+c; steps < 0
+        # fold into the step-0 pipeline-fill prologue.  Coverage proof in
+        # tests/test_kernels.py::test_chunk_schedule_covers_every_chunk_once.
+        @pl.when(j == 0)
+        def _prologue():
+            # tile 0 computes immediately: all C chunks now.
+            for c in range(C):
+                start_chunk(0, c)
+            # tiles 1..G-2: chunks 0..C-1-k had negative scheduled steps.
+            for k in range(1, G - 1):
+                if k >= 1:  # tile index is static here
+                    for c in range(0, C - k):
+                        @pl.when(k < nt)
+                        def _(k=k, c=c):
+                            start_chunk(k, c)
+
+        # steady state: at step j issue chunk C-k of tile j+k, k = 1..G-1.
+        for k in range(1, G):
+            c = C - k
+            if c < 0:
+                continue
+
+            @pl.when(j + k < nt)
+            def _(k=k, c=c):
+                start_chunk(j + k, c)
+
+    # wait for all chunks of tile j, then compute.
+    if G >= 2:
+        for c in range(C):
+            wait_chunk(j, c)
+    slot = jax.lax.rem(j, G)
+    w_tile = ring[slot]
+    acc = jax.lax.dot_general(
+        x_ref[...], w_tile,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y_ref[...] = acc.astype(out_dtype)
+
+
+def gpp_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    num_bufs: int = 4,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Streaming matmul with the generalized ping-pong DMA schedule.
+
+    Args:
+      x: (M, K) activations (VMEM-resident; M is the paper's n_in).
+      w: (K, N) weights in HBM, streamed in (K, block_n) column tiles.
+      block_n: weight tile width; multiple of 128 (MXU lane alignment).
+      num_bufs: ring depth G — 1: in-situ, 2: naive ping-pong, >=3: GPP.
+      interpret: run the kernel body in interpret mode (CPU validation).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if N % block_n != 0:
+        raise ValueError(f"N={N} must be divisible by block_n={block_n}")
+    if num_bufs < 1:
+        raise ValueError("num_bufs >= 1")
+    num_tiles = N // block_n
+    G = min(num_bufs, max(1, num_tiles))
+    C = max(1, G - 1)
+    if K < C:
+        raise ValueError(f"K={K} too small to split into {C} chunks")
+
+    # VMEM budget sanity (target TPU v5e ~128 MiB/core): ring + x + y block.
+    vmem_bytes = (G * K * block_n + M * K + M * block_n) * x.dtype.itemsize
+    if vmem_bytes > 100 * 1024 * 1024:
+        raise ValueError(
+            f"working set {vmem_bytes/2**20:.1f} MiB exceeds VMEM budget; "
+            f"reduce block_n or num_bufs"
+        )
+
+    kernel = functools.partial(
+        _gpp_kernel, num_bufs=G, bn=block_n, K=K, out_dtype=x.dtype
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((M, K), lambda j: (0, 0)),          # x: VMEM resident
+            pl.BlockSpec(memory_space=pl.ANY),               # w: stays in HBM
+        ],
+        out_specs=pl.BlockSpec((M, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, K, block_n), x.dtype),            # weight ring
+            pltpu.SemaphoreType.DMA((G,)),                   # per-slot DMA sems
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),              # sequential grid
+        ),
+        interpret=interpret,
+    )(x, w)

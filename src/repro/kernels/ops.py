@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`streamed_matmul` picks the ring depth from the same GPP planner that the
+paper's analytic model validates (`repro.core.schedule.plan_stream`), using
+TPU v5e constants: a (K, bn) bf16 tile moves 2*K*bn bytes at ~819 GB/s HBM
+while the MXU computes 2*M*K*bn flops at ~197 TFLOP/s, so
+t_dma/t_compute = 197e12*2 / (819e9 * 2*M) ≈ 120/M — small M (the paper's
+small-n_in regime) is exactly where deep rings win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import plan_stream
+from repro.kernels.gpp_matmul import gpp_matmul
+
+HBM_BYTES_PER_S = 819e9
+PEAK_FLOPS = 197e12
+
+
+def plan_ring_depth(M: int, K: int, block_n: int, dtype=jnp.bfloat16, max_ring: int = 8) -> int:
+    """Ring depth G = ceil(t_dma / t_compute) + 1 for one weight tile."""
+    itemsize = jnp.dtype(dtype).itemsize
+    plan = plan_stream(
+        block_bytes=K * block_n * itemsize,
+        compute_flops=2.0 * M * K * block_n,
+        flops_per_s=PEAK_FLOPS,
+        transfer_bytes_per_s=HBM_BYTES_PER_S,
+        max_ring=max_ring,
+    )
+    return plan.ring_depth
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "num_bufs", "interpret"))
+def streamed_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    num_bufs: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = x @ w with HBM-streamed weights under the GPP DMA schedule."""
+    if num_bufs is None:
+        num_bufs = plan_ring_depth(x.shape[0], x.shape[1], block_n, x.dtype)
+    return gpp_matmul(x, w, block_n=block_n, num_bufs=num_bufs, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "num_bufs", "interpret"))
+def streamed_gemm_sequence(
+    x: jnp.ndarray,
+    ws: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    num_bufs: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """The paper's BLAS workload: consecutive GeMMs ys[r] = x @ ws[r] with
+    every round's weights streamed from HBM.  The round dimension is folded
+    into the streamed tile stream, so the ring pipelines *across* GeMMs just
+    like macros pipeline across consecutive layers."""
+    R, K, N = ws.shape
+    w_flat = jnp.transpose(ws, (1, 0, 2)).reshape(K, R * N)
+    if num_bufs is None:
+        num_bufs = plan_ring_depth(x.shape[0], K, block_n, x.dtype)
+    y = gpp_matmul(x, w_flat, block_n=block_n, num_bufs=num_bufs, interpret=interpret)
+    M = x.shape[0]
+    return jnp.transpose(y.reshape(M, R, N), (1, 0, 2))

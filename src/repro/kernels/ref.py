@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y[M,N] = x[M,K] @ w[K,N] accumulated in f32, cast back to x.dtype."""
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def streamed_gemm_seq_ref(x: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
+    """Reference for a *sequence* of GeMMs with streamed weights (the paper's
+    consecutive-GeMM BLAS workload): ys[r] = x @ ws[r] for each round r."""
+    return jnp.einsum(
+        "mk,rkn->rmn",
+        x.astype(jnp.float32),
+        ws.astype(jnp.float32),
+    ).astype(x.dtype)

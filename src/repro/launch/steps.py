@@ -1,0 +1,257 @@
+"""Jitted train/prefill/decode steps with production shardings.
+
+This is the glue the launcher, dry-run, and benchmarks share: given
+(arch config, mesh, shape), build the step function plus the
+ShapeDtypeStruct input specs and in/out shardings, ready for either
+`.lower().compile()` (dry-run) or real execution (examples/tests on a host
+mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.pipeline import make_batch_specs
+from repro.dist import sharding as shd
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as tf
+from repro.optim import adamw as opt
+from repro.optim import adafactor as adaf
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any                      # jitted step function
+    input_specs: tuple           # positional ShapeDtypeStructs for .lower()
+    arg_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+HBM_RESIDENT_BUDGET = 6e9  # bytes of TP-sharded weights we allow resident
+
+
+def _rules_for(cfg: ModelConfig, mesh, serve: bool = False) -> shd.ShardRules:
+    # ZeRO-3 over ("pod","data") only when the params can't afford pod
+    # replication (1T-class models); small models keep FSDP intra-pod so no
+    # per-layer gather crosses the (slower) inter-pod links.
+    fsdp_axes = ("data",)
+    tp = mesh.shape.get("model", 1)
+    if "pod" in mesh.shape:
+        per_dev_replicated = cfg.total_params() * 2 / (16 * tp)
+        if per_dev_replicated > 4e9:
+            fsdp_axes = ("pod", "data")
+    # Serving: keep weights resident (TP-only) when they fit — FSDP would
+    # all-gather the whole model per decoded token.  Only 1T-class models
+    # must stay sharded (and are the paper's streaming case).
+    fsdp = True
+    if serve and cfg.total_params() * 2 / tp < HBM_RESIDENT_BUDGET:
+        fsdp = False
+    return shd.ShardRules(
+        tp_axis="model",
+        fsdp_axes=fsdp_axes,
+        dp_axes=dp_axes(mesh),
+        fsdp=fsdp,
+        moe_ep_mode=cfg.moe_ep_mode if cfg.num_experts else "tp",
+        moe_serve_resident=bool(serve and cfg.moe_serve_resident),
+    )
+
+
+def _stream_pspecs(cfg: ModelConfig, mesh, rules):
+    """(shard_specs, full_specs) for ONE superblock's weights (streamer args)."""
+    one = {
+        f"b{i}": tf.block_specs(cfg, k)
+        for i, k in enumerate(cfg.pattern)
+        if not k.startswith("shared_attn")
+    }
+    return (
+        shd.sharded_pspecs_one_layer(one, mesh, rules),
+        shd.gathered_pspecs(one, mesh, rules),
+    )
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                    optc: opt.AdamWConfig | None = None) -> StepBundle:
+    optc = optc or opt.AdamWConfig()
+    rules = _rules_for(cfg, mesh)
+
+    pspecs = tf.param_specs(cfg)
+    p_psp = shd.param_pspecs(pspecs, mesh, rules)
+    if cfg.optimizer == "adafactor":
+        opt_specs = adaf.adafactor_state_specs(pspecs)
+        # factors inherit the matching dims of the param sharding
+        def _factor_psp(psp_leaf_tree):
+            def f(path, s):
+                return P(*([None] * len(s.shape)))
+            return jax.tree_util.tree_map_with_path(f, opt_specs["factors"])
+        opt_psp = {"factors": _factor_psp(p_psp), "count": P()}
+    else:
+        opt_specs = opt.adamw_state_specs(pspecs)
+        opt_psp = {"mu": p_psp, "nu": p_psp, "count": P()}
+    batch_specs = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                   dtype=cfg.dtype)
+    b_psp = {
+        k: P(rules.dp_axes, *([None] * (len(v.shape) - 1)))
+        for k, v in batch_specs.items()
+    }
+
+    stream_shard, stream_full = (
+        _stream_pspecs(cfg, mesh, rules) if cfg.stream.mode != "resident"
+        else (None, None)
+    )
+
+    act_pspec = P(rules.dp_axes, None, None)
+
+    def train_step(params, opt_state, batch, step):
+        def loss(p):
+            return tf.loss_fn(p, cfg, batch, mesh=mesh,
+                              shard_specs=stream_shard, full_specs=stream_full,
+                              act_pspec=act_pspec)
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        lr = opt.cosine_lr(step, peak=optc.lr, warmup=200, total=10_000)
+        if cfg.optimizer == "adafactor":
+            params, opt_state, metrics = adaf.adafactor_update(
+                adaf.AdafactorConfig(lr=optc.lr), grads, opt_state, params, lr=lr)
+        else:
+            params, opt_state, metrics = opt.adamw_update(
+                optc, grads, opt_state, params, lr=lr)
+        metrics["loss"] = loss_val
+        return params, opt_state, metrics
+
+    named = functools.partial(NamedSharding, mesh)
+    arg_shardings = (
+        jax.tree.map(named, p_psp, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(named, opt_psp, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(named, b_psp, is_leaf=lambda x: isinstance(x, P)),
+        NamedSharding(mesh, P()),
+    )
+    out_shardings = (arg_shardings[0], arg_shardings[1], None)
+    fn = jax.jit(
+        train_step,
+        in_shardings=arg_shardings,
+        out_shardings=out_shardings,
+        donate_argnums=(0, 1),
+    )
+    input_specs = (
+        pspecs, opt_specs, batch_specs, jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return StepBundle(fn, input_specs, arg_shardings, out_shardings,
+                      meta={"rules": rules, "param_pspecs": p_psp})
+
+
+# ---------------------------------------------------------------------------
+# serve steps (prefill / decode)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    rules = _rules_for(cfg, mesh, serve=True)
+    pspecs = tf.param_specs(cfg)
+    p_psp = shd.param_pspecs(pspecs, mesh, rules)
+    batch_specs = make_batch_specs(cfg, shape.global_batch, shape.seq_len,
+                                   dtype=cfg.dtype)
+    batch_specs.pop("labels")
+    dp = rules.dp_axes
+    bsz = shape.global_batch
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bdim = dp if bsz % dp_size == 0 else None
+    b_psp = {k: P(bdim, *([None] * (len(v.shape) - 1)))
+             for k, v in batch_specs.items()}
+
+    act_pspec = P(bdim, None, None)
+
+    def prefill_step(params, batch):
+        return tf.prefill(params, cfg, batch, max_len=shape.seq_len,
+                          mesh=mesh, act_pspec=act_pspec)
+
+    named = functools.partial(NamedSharding, mesh)
+    arg_shardings = (
+        jax.tree.map(named, p_psp, is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(named, b_psp, is_leaf=lambda x: isinstance(x, P)),
+    )
+    cache_sp = tf.cache_specs(cfg, bsz, shape.seq_len)
+    cache_psp = shd.cache_pspecs(cache_sp, mesh, rules, bsz)
+    out_shardings = (None, jax.tree.map(named, cache_psp,
+                                        is_leaf=lambda x: isinstance(x, P)))
+    fn = jax.jit(prefill_step, in_shardings=arg_shardings,
+                 out_shardings=out_shardings)
+    return StepBundle(fn, (pspecs, batch_specs), arg_shardings, out_shardings,
+                      meta={"rules": rules, "cache_pspecs": cache_psp})
+
+
+def make_decode_step(cfg: ModelConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    """One-token decode with a seq_len KV cache (the decode_* cells)."""
+    if cfg.num_experts and cfg.num_experts % mesh.shape.get("model", 1) == 0:
+        # decode token counts are tiny: keep experts RESIDENT (E:model x
+        # d_ff:data) instead of streaming 2 TB of weights per token
+        cfg = cfg.with_(moe_serve_resident=True)
+    rules = _rules_for(cfg, mesh, serve=True)
+    pspecs = tf.param_specs(cfg)
+    p_psp = shd.param_pspecs(pspecs, mesh, rules)
+    bsz = shape.global_batch
+    cache_sp = tf.cache_specs(cfg, bsz, shape.seq_len)
+    cache_psp = shd.cache_pspecs(cache_sp, mesh, rules, bsz)
+
+    dp = rules.dp_axes
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bdim = dp if bsz % dp_size == 0 else None
+
+    if cfg.input_mode == "tokens":
+        tok_spec = jax.ShapeDtypeStruct((bsz, 1), jnp.int32)
+        tok_psp = P(bdim, None)
+    else:
+        tok_spec = jax.ShapeDtypeStruct((bsz, 1, cfg.d_model), cfg.jdtype)
+        tok_psp = P(bdim, None, None)
+
+    enc_spec = None
+    if cfg.encoder_tokens:
+        enc_spec = jax.ShapeDtypeStruct(
+            (bsz, cfg.encoder_tokens, cfg.d_model), cfg.jdtype)
+
+    def decode(params, toks, caches, pos, enc=None):
+        return tf.decode_step(params, cfg, toks, caches, pos, enc=enc)
+
+    named = functools.partial(NamedSharding, mesh)
+    arg_shardings = [
+        jax.tree.map(named, p_psp, is_leaf=lambda x: isinstance(x, P)),
+        NamedSharding(mesh, tok_psp),
+        jax.tree.map(named, cache_psp, is_leaf=lambda x: isinstance(x, P)),
+        NamedSharding(mesh, P()),
+    ]
+    input_specs = [pspecs, tok_spec, cache_sp,
+                   jax.ShapeDtypeStruct((), jnp.int32)]
+    if enc_spec is not None:
+        arg_shardings.append(NamedSharding(mesh, P(bdim, None, None)))
+        input_specs.append(enc_spec)
+    out_shardings = (None, arg_shardings[2])
+    fn = jax.jit(decode, in_shardings=tuple(arg_shardings),
+                 out_shardings=out_shardings, donate_argnums=(2,))
+    return StepBundle(fn, tuple(input_specs), tuple(arg_shardings),
+                      out_shardings, meta={"rules": rules})
+
+
+def make_step(cfg: ModelConfig, mesh, shape: ShapeConfig) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    if shape.kind == "decode":
+        return make_decode_step(cfg, mesh, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,10 @@
+from repro.models.registry import ARCH_NAMES, all_configs, get_config
+from repro.models.transformer import (
+    cache_specs, decode_step, forward, init_params, loss_fn, param_specs, prefill,
+)
+
+__all__ = [
+    "ARCH_NAMES", "all_configs", "get_config",
+    "cache_specs", "decode_step", "forward", "init_params", "loss_fn",
+    "param_specs", "prefill",
+]

@@ -1,0 +1,448 @@
+"""Attention variants: GQA (opt. QKV bias / sliding window / local:global),
+MLA (DeepSeek-style latent compression), and cross-attention (VLM).
+
+Cache layouts:
+  full window   k/v: (B, S_max, KVH, hd), positions filled [0, pos)
+  sliding (SWA) k/v: (B, W, KVH, hd) ring buffer indexed pos % W
+  MLA           c_kv: (B, S_max, kv_lora), k_rope: (B, S_max, rope_dim)
+                — the compressed-latent cache is the memory win.
+
+All attention math accumulates in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import sds, rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    window: int | None = None          # sliding-window size (None = full)
+    # MLA
+    kv_lora_rank: int | None = None
+    q_lora_rank: int | None = None
+    rope_head_dim: int = 64
+    dtype: object = jnp.bfloat16
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank is not None
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_specs(c: AttnConfig):
+    if c.is_mla:
+        nope = c.head_dim
+        sp = {
+            "w_dkv": sds((c.d_model, c.kv_lora_rank + c.rope_head_dim), c.dtype),
+            "w_uk": sds((c.kv_lora_rank, c.num_heads, nope), c.dtype),
+            "w_uv": sds((c.kv_lora_rank, c.num_heads, nope), c.dtype),
+            "w_o": sds((c.num_heads, nope, c.d_model), c.dtype),
+            "kv_norm": sds((c.kv_lora_rank,), c.dtype),
+        }
+        if c.q_lora_rank:
+            sp["w_dq"] = sds((c.d_model, c.q_lora_rank), c.dtype)
+            sp["w_uq"] = sds((c.q_lora_rank, c.num_heads, nope + c.rope_head_dim), c.dtype)
+            sp["q_norm"] = sds((c.q_lora_rank,), c.dtype)
+        else:
+            sp["w_q"] = sds((c.d_model, c.num_heads, nope + c.rope_head_dim), c.dtype)
+        return sp
+    sp = {
+        "w_q": sds((c.d_model, c.num_heads, c.head_dim), c.dtype),
+        "w_k": sds((c.d_model, c.num_kv_heads, c.head_dim), c.dtype),
+        "w_v": sds((c.d_model, c.num_kv_heads, c.head_dim), c.dtype),
+        "w_o": sds((c.num_heads, c.head_dim, c.d_model), c.dtype),
+    }
+    if c.qkv_bias:
+        sp["b_q"] = sds((c.num_heads, c.head_dim), c.dtype)
+        sp["b_k"] = sds((c.num_kv_heads, c.head_dim), c.dtype)
+        sp["b_v"] = sds((c.num_kv_heads, c.head_dim), c.dtype)
+    return sp
+
+
+def cross_attn_specs(c: AttnConfig):
+    """Cross-attention (queries from text, K/V from encoder embeddings)."""
+    return {
+        "w_q": sds((c.d_model, c.num_heads, c.head_dim), c.dtype),
+        "w_k": sds((c.d_model, c.num_kv_heads, c.head_dim), c.dtype),
+        "w_v": sds((c.d_model, c.num_kv_heads, c.head_dim), c.dtype),
+        "w_o": sds((c.num_heads, c.head_dim, c.d_model), c.dtype),
+        "q_norm": sds((c.head_dim,), c.dtype),
+        "k_norm": sds((c.head_dim,), c.dtype),
+    }
+
+
+def cache_specs(c: AttnConfig, batch: int, max_len: int):
+    """KV-cache ShapeDtypeStructs for decode."""
+    if c.is_mla:
+        return {
+            "c_kv": sds((batch, max_len, c.kv_lora_rank), c.dtype),
+            "k_rope": sds((batch, max_len, c.rope_head_dim), c.dtype),
+        }
+    span = min(max_len, c.window) if c.window else max_len
+    return {
+        "k": sds((batch, span, c.num_kv_heads, c.head_dim), c.dtype),
+        "v": sds((batch, span, c.num_kv_heads, c.head_dim), c.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,S,H,hd) k/v: (B,T,KVH,hd) mask: (B,S,T) or (S,T) broadcastable.
+
+    k/v stay in their storage dtype (bf16) with f32 ACCUMULATION via
+    preferred_element_type — an .astype(f32) on a 32k-token KV cache would
+    materialize (and reshard) a full-size f32 copy.  probs are cast back to
+    the storage dtype for the PV matmul (standard flash-kernel practice)."""
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    rep = H // KVH
+    qr = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    qr = qr.reshape(B, S, KVH, rep, hd)
+    logits = jnp.einsum("bsgrh,btgh->bgrst", qr, k,
+                        preferred_element_type=jnp.float32)
+    logits = jnp.where(mask[:, None, None] if mask.ndim == 3 else mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    # v's head dim may differ from q/k's (MLA: values are nope-only)
+    return out.reshape(B, S, H, v.shape[-1]).astype(q.dtype)
+
+
+def causal_mask(S: int, T: int, q_offset: int = 0, window: int | None = None):
+    """(S, T) mask: query i (global pos q_offset+i) sees keys j <= pos, and
+    within `window` if set.  q_offset may be traced (chunked attention)."""
+    qpos = q_offset + jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+def _ambient_constraint(x, spec):
+    """with_sharding_constraint against the ambient mesh, if one is set and
+    covers the named axes (no-op on mesh-less CPU test runs)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        names = set(mesh.axis_names)
+        if not all(a is None or a in names for a in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:  # noqa: BLE001 — constraints are an optimization only
+        return x
+
+
+def _tp_size() -> int:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return 1
+        return mesh.shape.get("model", 1)
+    except Exception:  # noqa: BLE001
+        return 1
+
+
+ATTN_Q_CHUNK = 512  # query-block size for memory-efficient attention
+ATTN_KV_CHUNK = 1024  # key-block size for context-parallel attention
+
+
+def _sdpa_chunked(q, k, v, scale, *, window=None, chunk=ATTN_Q_CHUNK):
+    """Causal attention with query blocking: scores for one (chunk x T) block
+    live at a time and are rematerialized in backward — peak memory
+    B*H*chunk*T*4 bytes instead of B*H*S*T*4 (the 17 GiB -> 2 GiB difference
+    at seq 4k/32k).  TPU-adaptation note (DESIGN.md): this is the pure-XLA
+    stand-in for a flash-attention kernel; the blocks are VMEM-sized."""
+    B, S, H, hd = q.shape
+    if S <= chunk or S % chunk:
+        return _sdpa(q, k, v, causal_mask(S, k.shape[1], 0, window), scale)
+    nq = S // chunk
+    qs = q.reshape(B, nq, chunk, H, hd).swapaxes(0, 1)  # (nq, B, qc, H, hd)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qc, i = inp
+        mask = causal_mask(chunk, k.shape[1], i * chunk, window)
+        return carry, _sdpa(qc, k, v, mask, scale)
+
+    _, outs = jax.lax.scan(body, jnp.zeros((), jnp.int32),
+                           (qs, jnp.arange(nq)))
+    # out head dim follows v (MLA values are nope-only, narrower than q)
+    return outs.swapaxes(0, 1).reshape(B, S, H, v.shape[-1])
+
+
+def _sdpa_kv_chunked(q, k, v, scale, *, window=None, chunk=ATTN_KV_CHUNK,
+                     q_offset=0, varying_axes=None):
+    """Online-softmax attention scanning KEY blocks.  q rows may be a
+    sequence-shard (context parallelism): `q_offset` gives their global
+    position for the causal mask.  Peak memory is one (S_local x chunk)
+    block of logits."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    KVH = k.shape[2]
+    rep = H // KVH
+    vd = v.shape[-1]
+    if T % chunk or T <= chunk:
+        return _sdpa(q, k, v, causal_mask(S, T, q_offset, window), scale)
+    nt = T // chunk
+    qr = (q.astype(jnp.float32) * scale).astype(k.dtype).reshape(B, S, KVH, rep, hd)
+    ks = k.reshape(B, nt, chunk, KVH, hd).swapaxes(0, 1)
+    vs = v.reshape(B, nt, chunk, KVH, vd).swapaxes(0, 1)
+
+    m0 = jnp.full((B, KVH, rep, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KVH, rep, S), jnp.float32)
+    a0 = jnp.zeros((B, S, KVH, rep, vd), jnp.float32)
+    if varying_axes:
+        # under shard_map the carry must match the body's varying-axis type
+        m0, l0, a0 = (jax.lax.pcast(t, tuple(varying_axes), to="varying")
+                      for t in (m0, l0, a0))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, j = inp
+        logits = jnp.einsum("bsgrh,btgh->bgrst", qr, kc,
+                            preferred_element_type=jnp.float32)
+        # query i is global position q_offset+i; keys are at j*chunk + t
+        mask = causal_mask(S, chunk, q_offset - j * chunk, window)
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        # guard: fully-masked rows keep m=-inf; use a safe max for exps
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = (acc * corr.transpose(0, 3, 1, 2)[..., None]
+                   + jnp.einsum("bgrst,btgh->bsgrh", p.astype(vc.dtype), vc,
+                                preferred_element_type=jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (ks, vs, jnp.arange(nt)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return out.reshape(B, S, H, vd).astype(q.dtype)
+
+
+def _attend(q, k, v, scale, *, window=None):
+    """Dispatch: context-parallel attention (shard_map: q sequence-sharded
+    over the model axis, k/v replicated per data shard, masks on global
+    positions) when heads don't divide the TP axis; q-chunked otherwise.
+
+    shard_map (not sharding constraints) because the SPMD partitioner is
+    free to re-shard einsum internals mid-graph — on a 28-head model it
+    chooses head_dim contraction sharding and all-reduces every logits
+    block (~7 GiB x layers x chunks).  Manual mapping pins the layout."""
+    H = q.shape[2]
+    tp = _tp_size()
+    if tp > 1 and H % tp and q.shape[1] % tp == 0 and q.shape[1] > 1:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        B = q.shape[0]
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        bspec = dp if (dp and B % dp_size == 0) else None
+        S_local = q.shape[1] // tp
+
+        def local(qb, kb, vb):
+            idx = jax.lax.axis_index("model")
+            return _sdpa_kv_chunked(qb, kb, vb, scale, window=window,
+                                    q_offset=idx * S_local,
+                                    varying_axes=mesh.axis_names)
+
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(bspec, "model", None, None),
+                      P(bspec, None, None, None),
+                      P(bspec, None, None, None)),
+            out_specs=P(bspec, "model", None, None),
+        )(q, k, v)
+    return _sdpa_chunked(q, k, v, scale, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GQA (covers MHA, SWA, local/global via `window`)
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(p, c: AttnConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, p["w_k"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, p["w_v"])
+    if c.qkv_bias:
+        q = q + p["b_q"].astype(q.dtype)
+        k = k + p["b_k"].astype(k.dtype)
+        v = v + p["b_v"].astype(v.dtype)
+    q = rope(q, positions, c.rope_theta)
+    k = rope(k, positions, c.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(p, c: AttnConfig, x, positions):
+    """Training/prefill self-attention (causal, optional window)."""
+    B, S, _ = x.shape
+    q, k, v = gqa_project_qkv(p, c, x, positions)
+    out = _attend(q, k, v, 1.0 / math.sqrt(c.head_dim), window=c.window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+
+
+def gqa_prefill(p, c: AttnConfig, x, positions, max_len: int):
+    """Prefill: returns (out, cache) with cache laid out for decode."""
+    B, S, _ = x.shape
+    q, k, v = gqa_project_qkv(p, c, x, positions)
+    out = _attend(q, k, v, 1.0 / math.sqrt(c.head_dim), window=c.window)
+    span = min(max_len, c.window) if c.window else max_len
+    kc = jnp.zeros((B, span, c.num_kv_heads, c.head_dim), k.dtype)
+    vc = jnp.zeros_like(kc)
+    if c.window and S > span:
+        k_tail, v_tail = k[:, -span:], v[:, -span:]
+        # ring layout: slot = pos % span
+        slots = (positions[:, -span:]) % span
+        kc = kc.at[jnp.arange(B)[:, None], slots].set(k_tail)
+        vc = vc.at[jnp.arange(B)[:, None], slots].set(v_tail)
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k[:, : min(S, span)], (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, : min(S, span)], (0, 0, 0, 0))
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), {"k": kc, "v": vc}
+
+
+def gqa_decode(p, c: AttnConfig, x, cache, pos):
+    """One-token decode. x: (B, 1, D); pos: scalar current position."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = gqa_project_qkv(p, c, x, positions)
+    span = cache["k"].shape[1]
+    slot = pos % span if c.window else pos
+    kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    kpos_abs = jnp.arange(span)
+    if c.window:
+        # ring: entry j holds absolute position p' with p' % span == j,
+        # p' in (pos-span, pos]
+        kpos_abs = pos - ((pos - kpos_abs) % span)
+        valid = (kpos_abs >= 0) & (kpos_abs >= pos - (c.window - 1))
+    else:
+        valid = kpos_abs <= pos
+    mask = valid[None, None, :]  # (1,1,span) -> broadcast (B,1,span)
+    mask = jnp.broadcast_to(mask, (B, 1, span))
+    out = _sdpa(q, kc, vc, mask, 1.0 / math.sqrt(c.head_dim))
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def _mla_q(p, c: AttnConfig, x, positions):
+    from repro.models.layers import rmsnorm
+    nope = c.head_dim
+    if c.q_lora_rank:
+        cq = rmsnorm({"scale": p["q_norm"]}, x @ p["w_dq"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, c.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_latent(p, c: AttnConfig, x, positions):
+    from repro.models.layers import rmsnorm
+    d = x @ p["w_dkv"]
+    c_kv, k_rope = d[..., : c.kv_lora_rank], d[..., c.kv_lora_rank:]
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv)
+    k_rope = rope(k_rope[..., None, :], positions, c.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def _mla_attend(p, c: AttnConfig, q, c_kv, k_rope, mask):
+    nope = c.head_dim
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], c.rope_head_dim))], axis=-1
+    )
+    out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(nope + c.rope_head_dim))
+    out = out[..., :nope]  # v has nope dims; _sdpa padded? no: v dims = nope
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+
+
+def mla_forward(p, c: AttnConfig, x, positions):
+    B, S, _ = x.shape
+    q = _mla_q(p, c, x, positions)
+    c_kv, k_rope = _mla_latent(p, c, x, positions)
+    nope = c.head_dim
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], c.rope_head_dim))], axis=-1)
+    out = _sdpa_chunked(q, k, v, 1.0 / math.sqrt(nope + c.rope_head_dim))
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+
+
+def mla_prefill(p, c: AttnConfig, x, positions, max_len: int):
+    B, S, _ = x.shape
+    out = mla_forward(p, c, x, positions)
+    c_kv, k_rope = _mla_latent(p, c, x, positions)
+    ckv_buf = jnp.zeros((B, max_len, c.kv_lora_rank), c_kv.dtype)
+    kr_buf = jnp.zeros((B, max_len, c.rope_head_dim), k_rope.dtype)
+    ckv_buf = jax.lax.dynamic_update_slice(ckv_buf, c_kv[:, :max_len], (0, 0, 0))
+    kr_buf = jax.lax.dynamic_update_slice(kr_buf, k_rope[:, :max_len], (0, 0, 0))
+    return out, {"c_kv": ckv_buf, "k_rope": kr_buf}
+
+
+def mla_decode(p, c: AttnConfig, x, cache, pos):
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _mla_q(p, c, x, positions)
+    c_kv_new, k_rope_new = _mla_latent(p, c, x, positions)
+    ckv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+    T = ckv.shape[1]
+    mask = jnp.broadcast_to((jnp.arange(T) <= pos)[None, None, :], (B, 1, T))
+    out = _mla_attend(p, c, q, ckv, kr, mask)
+    return out, {"c_kv": ckv, "k_rope": kr}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (text queries over encoder embeddings)
+# ---------------------------------------------------------------------------
+
+def cross_attn_forward(p, c: AttnConfig, x, enc):
+    """x: (B, S, D) text; enc: (B, T, D) patch/frame embeddings (stubbed
+    modality frontend).  No causal mask; no cache growth during decode."""
+    from repro.models.layers import rmsnorm
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("btd,dgk->btgk", enc, p["w_k"])
+    v = jnp.einsum("btd,dgk->btgk", enc, p["w_v"])
+    q = rmsnorm({"scale": p["q_norm"]}, q)
+    k = rmsnorm({"scale": p["k_norm"]}, k)
+    B, S = x.shape[:2]
+    T = enc.shape[1]
+    mask = jnp.ones((B, S, T), bool)
+    out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(c.head_dim))
+    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])

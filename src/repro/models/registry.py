@@ -1,0 +1,32 @@
+"""--arch name -> ModelConfig lookup for the launcher/dry-run/benchmarks."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "llama-3.2-vision-11b": "repro.configs.llama_3_2_vision_11b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> dict[str, ModelConfig]:
+    return {n: get_config(n, smoke) for n in ARCH_NAMES}

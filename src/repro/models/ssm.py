@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) block — the state-space mixer used by Zamba2.
+
+Simplified-but-faithful SSD: per-head scalar decay a_t = exp(-softplus(dt) *
+A), state S_t = a_t * S_{t-1} + dt * B_t ⊗ x_t, y_t = C_t · S_t + D * x_t,
+with a depthwise causal conv in front and a gated output projection — the
+structure that matters for compute/memory/roofline and for decode's O(1)
+state, which is what long_500k exercises.
+
+Sequence processing uses an associative scan (log-depth, XLA-friendly);
+decode is a single recurrence step on the carried state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import sds
+
+CONV_K = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class SsmConfig:
+    d_model: int
+    d_inner: int          # typically 2*d_model
+    d_state: int          # N: state dim per channel (zamba2: 64)
+    n_heads: int          # channels grouped into heads for dt/A
+    dtype: object = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def ssm_specs(c: SsmConfig):
+    return {
+        "w_in": sds((c.d_model, 2 * c.d_inner), c.dtype),      # x and gate z
+        "w_bc": sds((c.d_model, 2 * c.d_state), c.dtype),      # B and C
+        "w_dt": sds((c.d_model, c.n_heads), c.dtype),
+        "conv_w": sds((CONV_K, c.d_inner), c.dtype),
+        "A_log": sds((c.n_heads,), jnp.float32),
+        "D": sds((c.n_heads,), jnp.float32),
+        "dt_bias": sds((c.n_heads,), jnp.float32),
+        "w_out": sds((c.d_inner, c.d_model), c.dtype),
+    }
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B,S,Di), w: (K,Di)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(K))
+
+
+def _ssd_params(p, c: SsmConfig, u):
+    """Shared projections. u: (B,S,D) -> x:(B,S,Di) z, B, C, dt, a."""
+    xz = u @ p["w_in"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = _conv1d_causal(x, p["conv_w"])
+    x = jax.nn.silu(x)
+    bc = u @ p["w_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                       # (B,S,N)
+    dt = jax.nn.softplus(
+        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )                                                        # (B,S,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                   # decay in (0,1)
+    return x, z, Bm, Cm, dt, a
+
+
+SSD_CHUNK = 256  # intra-chunk quadratic window (VMEM-sized; TPU adaptation)
+
+
+def _ssd_chunked(p, c: SsmConfig, u: jnp.ndarray):
+    """Chunked SSD (Mamba2 duality): intra-chunk quadratic form + inter-chunk
+    state carry — never materializes per-position (P, N) states, which the
+    naive associative scan does at (B,S,H,P,N) (~100 GiB at 4k x 2.5k dims).
+
+    Returns (hidden (B,S,H,P) f32, final state (B,H,P,N))."""
+    B_, S, _ = u.shape
+    H, P, N = c.n_heads, c.head_dim, c.d_state
+    Lc = min(SSD_CHUNK, S)
+    if S % Lc:
+        raise ValueError(f"seq len {S} must be divisible by ssd chunk {Lc}")
+    nc = S // Lc
+    x, z, Bm, Cm, dt, a = _ssd_params(p, c, u)
+    xh = x.reshape(B_, S, H, P).astype(jnp.float32)
+    loga = jnp.log(jnp.maximum(a, 1e-30))                    # (B,S,H)
+
+    def resh(t):  # (B,S,...) -> (nc,B,Lc,...)
+        return t.reshape(B_, nc, Lc, *t.shape[2:]).swapaxes(0, 1)
+
+    xs, Bs, Cs, dts, logas = map(resh, (
+        xh, Bm.astype(jnp.float32), Cm.astype(jnp.float32), dt, loga))
+
+    s0 = jnp.zeros((B_, H, P, N), jnp.float32)
+
+    def step(s_prev, inp):
+        xc, bc, cc, dtc, lac = inp                  # (B,Lc,H,P)/(B,Lc,N)/...
+        A = jnp.cumsum(lac, axis=1)                 # (B,Lc,H) decay to pos t
+        # intra-chunk: y[t] = sum_{s<=t} exp(A_t - A_s) dt_s (C_t.B_s) x_s
+        decay = A[:, :, None, :] - A[:, None, :, :]          # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+        decay = jnp.where(causal[None, :, :, None], decay, -jnp.inf)
+        gates = jnp.exp(decay) * dtc[:, None, :, :]          # (B,t,s,H)
+        scores = jnp.einsum("btn,bsn->bts", cc, bc)          # (B,t,s)
+        w = gates * scores[..., None]                        # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xc)
+        # inter-chunk: y[t] += exp(A_t) C_t . s_prev
+        y_inter = jnp.exp(A)[..., None] * jnp.einsum(
+            "btn,bhpn->bthp", cc, s_prev)
+        # state update to end of chunk
+        wA = jnp.exp(A[:, -1:, :] - A) * dtc                 # (B,Lc,H)
+        s_new = (s_prev * jnp.exp(A[:, -1])[..., None, None]
+                 + jnp.einsum("bsh,bshp,bsn->bhpn", wA, xc, bc))
+        return s_new, y_intra + y_inter
+
+    state, ys = jax.lax.scan(step, s0, (xs, Bs, Cs, dts, logas))
+    y = ys.swapaxes(0, 1).reshape(B_, S, H, P)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, H * P).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], state
+
+
+def ssm_forward(p, c: SsmConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence SSD (chunked).  u: (B,S,D)."""
+    y, _ = _ssd_chunked(p, c, u)
+    return y
+
+
+def ssm_state_specs(c: SsmConfig, batch: int):
+    return {"s": sds((batch, c.n_heads, c.head_dim, c.d_state), jnp.float32),
+            "conv": sds((batch, CONV_K - 1, c.d_inner), c.dtype)}
+
+
+def ssm_prefill(p, c: SsmConfig, u: jnp.ndarray):
+    """Returns (y, state) — state carries S_T and the conv tail."""
+    B_, S, _ = u.shape
+    y, state = _ssd_chunked(p, c, u)
+    xz = u @ p["w_in"]
+    x_raw, _ = jnp.split(xz, 2, axis=-1)
+    conv_tail = x_raw[:, -(CONV_K - 1):]
+    if S < CONV_K - 1:
+        conv_tail = jnp.pad(x_raw, ((0, 0), (CONV_K - 1 - S, 0), (0, 0)))
+    return y, {"s": state, "conv": conv_tail}
+
+
+def ssm_decode(p, c: SsmConfig, u: jnp.ndarray, state):
+    """One-step recurrence. u: (B,1,D)."""
+    B_, _, _ = u.shape
+    H, P, N = c.n_heads, c.head_dim, c.d_state
+    xz = u @ p["w_in"]
+    x_raw, z = jnp.split(xz, 2, axis=-1)                    # (B,1,Di)
+    window = jnp.concatenate([state["conv"], x_raw], axis=1)  # (B,K,Di)
+    x = jnp.einsum("bkd,kd->bd", window, p["conv_w"])[:, None]
+    x = jax.nn.silu(x)
+    bc = u @ p["w_bc"]
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                  # (B,1,H)
+    xh = x.reshape(B_, 1, H, P).astype(jnp.float32)
+    contrib = jnp.einsum("bsh,bshp,bsn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    s_new = state["s"] * a[:, 0, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", s_new, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh[:, 0]
+    y = y.reshape(B_, 1, H * P).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], {"s": s_new, "conv": window[:, 1:]}

@@ -1,0 +1,468 @@
+"""Backbone assembler: composes attention/MoE/SSM/xLSTM blocks into the ten
+assigned architectures, with scan-over-superblocks and optional GPP weight
+streaming (the paper's technique) on the stacked block weights.
+
+Layer layout: `cfg.prefix_pattern` names unstacked leading layers (e.g. the
+dense first layer of DeepSeek/Kimi MoEs); `cfg.pattern` is the repeating
+superblock (e.g. gemma3's 5 local + 1 global) stacked `num_superblocks`
+times and scanned.  "shared_attn" (Zamba2) uses one unstacked param set
+reused by every superblock — the paper's weight-reuse limit case.
+
+Entry points:
+  param_specs / init_params
+  loss_fn(params, cfg, batch)                      training forward + CE
+  prefill(params, cfg, batch, max_len)             -> (logits, caches)
+  decode_step(params, cfg, tokens, caches, pos)    -> (logits, caches)
+  cache_specs(cfg, batch, max_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.streamer import StreamSettings, stream_layers
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (
+    cross_entropy, cross_entropy_chunked, embed, embed_specs, init_from_specs, lm_head, lm_head_specs,
+    mlp, mlp_specs, rmsnorm, rmsnorm_specs, sds, stack_specs, unembed,
+)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-kind specs
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ModelConfig, kind: str) -> attn.AttnConfig:
+    window = cfg.window_size if kind.endswith(":window") else None
+    return attn.AttnConfig(
+        d_model=cfg.d_model,
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        window=window,
+        kv_lora_rank=cfg.kv_lora_rank,
+        q_lora_rank=cfg.q_lora_rank,
+        rope_head_dim=cfg.rope_head_dim,
+        dtype=cfg.jdtype,
+    )
+
+
+def _ssm_cfg(cfg: ModelConfig) -> ssm_mod.SsmConfig:
+    return ssm_mod.SsmConfig(
+        d_model=cfg.d_model,
+        d_inner=cfg.ssm_expansion * cfg.d_model,
+        d_state=cfg.ssm_state_dim,
+        n_heads=cfg.num_heads,
+        dtype=cfg.jdtype,
+    )
+
+
+def _xlstm_cfg(cfg: ModelConfig) -> xlstm_mod.XlstmConfig:
+    return xlstm_mod.XlstmConfig(
+        d_model=cfg.d_model, n_heads=cfg.num_heads, dtype=cfg.jdtype
+    )
+
+
+def _moe_cfg(cfg: ModelConfig) -> moe_mod.MoeConfig:
+    return moe_mod.MoeConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe_d_ff or cfg.d_ff,
+        num_experts=cfg.num_experts,
+        experts_per_token=cfg.experts_per_token,
+        num_shared_experts=cfg.num_shared_experts,
+        capacity_factor=cfg.moe_capacity_factor,
+        act=cfg.act,
+        dtype=cfg.jdtype,
+        ep_mode=cfg.moe_ep_mode,
+        serve_resident=cfg.moe_serve_resident,
+    )
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> Pytree:
+    d, dt = cfg.d_model, cfg.jdtype
+    base = kind.split(":")[0]
+    if base in ("dense", "shared_attn"):
+        return {
+            "ln1": rmsnorm_specs(d, dt),
+            "attn": attn.attn_specs(_attn_cfg(cfg, kind)),
+            "ln2": rmsnorm_specs(d, dt),
+            "mlp": mlp_specs(d, cfg.d_ff, dt, cfg.act),
+        }
+    if base == "moe":
+        return {
+            "ln1": rmsnorm_specs(d, dt),
+            "attn": attn.attn_specs(_attn_cfg(cfg, kind)),
+            "ln2": rmsnorm_specs(d, dt),
+            "moe": moe_mod.moe_specs(_moe_cfg(cfg)),
+        }
+    if base == "mamba":
+        return {"ln": rmsnorm_specs(d, dt), "ssm": ssm_mod.ssm_specs(_ssm_cfg(cfg))}
+    if base in ("mlstm", "slstm"):
+        mix = (xlstm_mod.mlstm_specs if base == "mlstm"
+               else xlstm_mod.slstm_specs)(_xlstm_cfg(cfg))
+        sp = {"ln1": rmsnorm_specs(d, dt), "mix": mix}
+        if cfg.d_ff:  # xlstm-1.3b has d_ff == 0: mixer-only blocks
+            sp["ln2"] = rmsnorm_specs(d, dt)
+            sp["mlp"] = mlp_specs(d, cfg.d_ff, dt, cfg.act)
+        return sp
+    if base == "cross":
+        return {
+            "ln1": rmsnorm_specs(d, dt),
+            "attn": attn.cross_attn_specs(_attn_cfg(cfg, kind)),
+            "ln2": rmsnorm_specs(d, dt),
+            "mlp": mlp_specs(d, cfg.d_ff, dt, cfg.act),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def param_specs(cfg: ModelConfig) -> Pytree:
+    sp: dict = {}
+    if cfg.input_mode == "tokens":
+        sp["embed"] = embed_specs(cfg.vocab_size, cfg.d_model, cfg.jdtype)
+    sp["prefix"] = [block_specs(cfg, k) for k in cfg.prefix_pattern]
+    S = cfg.num_superblocks
+    sp["blocks"] = {
+        f"b{i}": stack_specs(block_specs(cfg, k), S)
+        for i, k in enumerate(cfg.pattern)
+        if not k.startswith("shared_attn")
+    }
+    if any(k.startswith("shared_attn") for k in cfg.pattern):
+        sp["shared"] = block_specs(cfg, "shared_attn")
+    sp["final_norm"] = rmsnorm_specs(cfg.d_model, cfg.jdtype)
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = lm_head_specs(cfg.vocab_size, cfg.d_model, cfg.jdtype)
+    return sp
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Pytree:
+    return init_from_specs(param_specs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# block application (training / full-sequence mode)
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg: ModelConfig, kind: str, p: Pytree, x: jnp.ndarray,
+                positions: jnp.ndarray, enc: jnp.ndarray | None) -> jnp.ndarray:
+    base = kind.split(":")[0]
+    ac = _attn_cfg(cfg, kind)
+    if base in ("dense", "shared_attn", "moe"):
+        h = rmsnorm(p["ln1"], x)
+        if ac.is_mla:
+            h = attn.mla_forward(p["attn"], ac, h, positions)
+        else:
+            h = attn.gqa_forward(p["attn"], ac, h, positions)
+        x = x + h
+        h = rmsnorm(p["ln2"], x)
+        if base == "moe":
+            h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+        else:
+            h = mlp(p["mlp"], h, cfg.act)
+        return x + h
+    if base == "mamba":
+        return x + ssm_mod.ssm_forward(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x))
+    if base in ("mlstm", "slstm"):
+        fwd = xlstm_mod.mlstm_forward if base == "mlstm" else xlstm_mod.slstm_forward
+        x = x + fwd(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x))
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x
+    if base == "cross":
+        h = attn.cross_attn_forward(p["attn"], ac, rmsnorm(p["ln1"], x), enc)
+        x = x + h
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+    raise ValueError(kind)
+
+
+def _superblock_apply(cfg: ModelConfig, shared: Pytree | None, enc):
+    """Returns apply_fn(carry, stacked_ws_for_one_superblock) for scan/stream."""
+
+    def apply_fn(carry, ws):
+        x, positions = carry
+        for i, kind in enumerate(cfg.pattern):
+            if kind.startswith("shared_attn"):
+                x = apply_block(cfg, kind, shared, x, positions, enc)
+            else:
+                x = apply_block(cfg, kind, ws[f"b{i}"], x, positions, enc)
+        return (x, positions), None
+
+    return apply_fn
+
+
+def _wsc(x, pspec, mesh):
+    """with_sharding_constraint that tolerates mesh-less runs."""
+    if mesh is None or pspec is None or getattr(mesh, "empty", False):
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def forward(params: Pytree, cfg: ModelConfig, batch: dict,
+            mesh=None, shard_specs=None, full_specs=None,
+            return_hidden: bool = False, act_pspec=None) -> jnp.ndarray:
+    """Full-sequence forward to logits.  batch keys: tokens|embeds, [enc]."""
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = batch["embeds"].astype(cfg.jdtype)
+    # pin activation layout (batch over dp axes) — XLA otherwise may unshard
+    # the batch and blow up attention temp memory
+    x = _wsc(x, act_pspec, mesh)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    enc = batch.get("enc")
+    if enc is not None:
+        enc = enc.astype(cfg.jdtype)
+
+    for kind, p in zip(cfg.prefix_pattern, params["prefix"]):
+        x = apply_block(cfg, kind, p, x, positions, enc)
+
+    shared = params.get("shared")
+    apply_fn = _superblock_apply(cfg, shared, enc)
+
+    if cfg.stream.mode == "resident" or shard_specs is None:
+        def body(carry, ws):
+            return apply_fn(carry, ws)
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        (x, _), _ = jax.lax.scan(body, (x, positions), params["blocks"])
+    else:
+        def stream_apply(carry, ws):
+            new_carry, _ = apply_fn(carry, ws)
+            return new_carry
+        if cfg.remat == "block":
+            stream_apply = jax.checkpoint(stream_apply)
+        x, _ = stream_layers(
+            stream_apply, (x, positions), params["blocks"], cfg.num_superblocks,
+            settings=cfg.stream, mesh=mesh,
+            shard_specs=shard_specs, full_specs=full_specs,
+        )
+
+    x = rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x)
+    return lm_head(params["lm_head"], x)
+
+
+def hidden_states(params: Pytree, cfg: ModelConfig, batch: dict,
+                  mesh=None, shard_specs=None, full_specs=None,
+                  act_pspec=None) -> jnp.ndarray:
+    """Forward up to (and including) the final norm — no LM head."""
+    return forward(params, cfg, batch, mesh, shard_specs, full_specs,
+                   return_hidden=True, act_pspec=act_pspec)
+
+
+def loss_fn(params: Pytree, cfg: ModelConfig, batch: dict,
+            mesh=None, shard_specs=None, full_specs=None,
+            act_pspec=None) -> jnp.ndarray:
+    x = hidden_states(params, cfg, batch, mesh, shard_specs, full_specs,
+                      act_pspec=act_pspec)
+
+    if cfg.tie_embeddings:
+        head = lambda xc: unembed(params["embed"], xc)
+    else:
+        head = lambda xc: lm_head(params["lm_head"], xc)
+    return cross_entropy_chunked(head, x, batch["labels"], chunk=512)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_specs(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    base = kind.split(":")[0]
+    if base in ("dense", "shared_attn", "moe"):
+        return attn.cache_specs(_attn_cfg(cfg, kind), batch, max_len)
+    if base == "mamba":
+        return ssm_mod.ssm_state_specs(_ssm_cfg(cfg), batch)
+    if base == "mlstm":
+        return xlstm_mod.mlstm_state_specs(_xlstm_cfg(cfg), batch)
+    if base == "slstm":
+        return xlstm_mod.slstm_state_specs(_xlstm_cfg(cfg), batch)
+    if base == "cross":
+        return None  # K/V come from the static encoder embeddings
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    S = cfg.num_superblocks
+    caches = {
+        "prefix": [
+            _block_cache_specs(cfg, k, batch, max_len) for k in cfg.prefix_pattern
+        ],
+        "blocks": {},
+    }
+    for i, k in enumerate(cfg.pattern):
+        cs = _block_cache_specs(cfg, k, batch, max_len)
+        if cs is not None:
+            caches["blocks"][f"b{i}"] = jax.tree.map(
+                lambda s: sds((S, *s.shape), s.dtype), cs
+            )
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def _block_prefill(cfg, kind, p, x, positions, enc, max_len):
+    base = kind.split(":")[0]
+    ac = _attn_cfg(cfg, kind)
+    if base in ("dense", "shared_attn", "moe"):
+        h = rmsnorm(p["ln1"], x)
+        if ac.is_mla:
+            h, cache = attn.mla_prefill(p["attn"], ac, h, positions, max_len)
+        else:
+            h, cache = attn.gqa_prefill(p["attn"], ac, h, positions, max_len)
+        x = x + h
+        h = rmsnorm(p["ln2"], x)
+        if base == "moe":
+            h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+        else:
+            h = mlp(p["mlp"], h, cfg.act)
+        return x + h, cache
+    if base == "mamba":
+        y, st = ssm_mod.ssm_prefill(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x))
+        return x + y, st
+    if base in ("mlstm", "slstm"):
+        fn = xlstm_mod.mlstm_prefill if base == "mlstm" else xlstm_mod.slstm_prefill
+        y, st = fn(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x))
+        x = x + y
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x, st
+    if base == "cross":
+        return apply_block(cfg, kind, p, x, positions, enc), None
+    raise ValueError(kind)
+
+
+def _block_decode(cfg, kind, p, x, cache, pos, enc):
+    base = kind.split(":")[0]
+    ac = _attn_cfg(cfg, kind)
+    if base in ("dense", "shared_attn", "moe"):
+        h = rmsnorm(p["ln1"], x)
+        if ac.is_mla:
+            h, cache = attn.mla_decode(p["attn"], ac, h, cache, pos)
+        else:
+            h, cache = attn.gqa_decode(p["attn"], ac, h, cache, pos)
+        x = x + h
+        h = rmsnorm(p["ln2"], x)
+        if base == "moe":
+            h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+        else:
+            h = mlp(p["mlp"], h, cfg.act)
+        return x + h, cache
+    if base == "mamba":
+        y, st = ssm_mod.ssm_decode(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x), cache)
+        return x + y, st
+    if base in ("mlstm", "slstm"):
+        fn = xlstm_mod.mlstm_decode if base == "mlstm" else xlstm_mod.slstm_decode
+        y, st = fn(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x), cache)
+        x = x + y
+        if cfg.d_ff:
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x, st
+    if base == "cross":
+        positions = None
+        h = attn.cross_attn_forward(p["attn"], ac, rmsnorm(p["ln1"], x), enc)
+        x = x + h
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act), None
+    raise ValueError(kind)
+
+
+def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int,
+            mesh=None, act_pspec=None):
+    """Process the prompt; returns (last-position logits, caches)."""
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = batch["embeds"].astype(cfg.jdtype)
+    x = _wsc(x, act_pspec, mesh)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    enc = batch.get("enc")
+    if enc is not None:
+        enc = enc.astype(cfg.jdtype)
+
+    caches = {"prefix": [], "blocks": {}}
+    for kind, p in zip(cfg.prefix_pattern, params["prefix"]):
+        x, c = _block_prefill(cfg, kind, p, x, positions, enc, max_len)
+        caches["prefix"].append(c)
+
+    shared = params.get("shared")
+
+    def body(carry, ws):
+        x = carry
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
+            x, c = _block_prefill(cfg, kind, p, x, positions, enc, max_len)
+            if c is not None:
+                new_caches[f"b{i}"] = c
+        return x, new_caches
+
+    x, blk_caches = jax.lax.scan(body, x, params["blocks"])
+    caches["blocks"] = blk_caches
+
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
+              else lm_head(params["lm_head"], x))
+    return logits, caches
+
+
+def decode_step(params: Pytree, cfg: ModelConfig, tokens_or_embeds, caches, pos,
+                enc=None):
+    """One decode step.  tokens: (B, 1) ints (or (B,1,D) embeds).  pos: traced
+    scalar — absolute position of the new token."""
+    if cfg.input_mode == "tokens":
+        x = embed(params["embed"], tokens_or_embeds)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = tokens_or_embeds.astype(cfg.jdtype)
+    if enc is not None:
+        enc = enc.astype(cfg.jdtype)
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c = _block_decode(cfg, kind, p, x, c, pos, enc)
+        new_prefix.append(c)
+
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x = carry
+        ws, cache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
+            c_in = cache.get(f"b{i}")
+            x, c_out = _block_decode(cfg, kind, p, x, c_in, pos, enc)
+            if c_out is not None:
+                new_caches[f"b{i}"] = c_out
+        return x, new_caches
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
+              else lm_head(params["lm_head"], x))
+    return logits, {"prefix": new_prefix, "blocks": blk_caches}

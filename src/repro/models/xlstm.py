@@ -1,0 +1,270 @@
+"""xLSTM blocks: mLSTM (matrix-memory) and sLSTM (scalar-memory with
+exponential gating), per arXiv:2405.04517, adapted to TPU-friendly JAX.
+
+mLSTM state: per-head matrix memory M (hd x hd), normalizer n (hd), max-gate
+m (scalar) — decode is O(1), which is why xlstm runs the long_500k cell.
+Sequence mode uses a chunkwise recurrence over an associative scan of the
+gate products (log-depth), matching the recurrent semantics exactly.
+
+sLSTM state: per-head scalar cell c, normalizer n, max-gate m.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import sds
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmConfig:
+    d_model: int
+    n_heads: int
+    dtype: object = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(c: XlstmConfig):
+    d, h, hd = c.d_model, c.n_heads, c.head_dim
+    return {
+        "w_q": sds((d, h, hd), c.dtype),
+        "w_k": sds((d, h, hd), c.dtype),
+        "w_v": sds((d, h, hd), c.dtype),
+        "w_i": sds((d, h), c.dtype),       # input gate (exp)
+        "w_f": sds((d, h), c.dtype),       # forget gate
+        "b_i": sds((h,), jnp.float32),
+        "b_f": sds((h,), jnp.float32),
+        "w_o": sds((h, hd, d), c.dtype),
+        "ogate": sds((d, d), c.dtype),
+    }
+
+
+def mlstm_state_specs(c: XlstmConfig, batch: int):
+    h, hd = c.n_heads, c.head_dim
+    return {
+        "M": sds((batch, h, hd, hd), jnp.float32),
+        "n": sds((batch, h, hd), jnp.float32),
+        "m": sds((batch, h), jnp.float32),
+    }
+
+
+def _mlstm_gates(p, x):
+    i = (x @ p["w_i"]).astype(jnp.float32) + p["b_i"]
+    f = (x @ p["w_f"]).astype(jnp.float32) + p["b_f"]
+    logf = -jax.nn.softplus(-f)           # log sigmoid(f): stable
+    return i, logf
+
+
+MLSTM_CHUNK = 256  # quadratic window kept VMEM-sized (TPU adaptation)
+
+
+def _mlstm_qkv(p, c: XlstmConfig, x):
+    hd = c.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"]).astype(jnp.float32) / (hd ** 0.5)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"]).astype(jnp.float32)
+    return q, k, v
+
+
+def _mlstm_chunk_scan(p, c: XlstmConfig, x, state0):
+    """Chunkwise-parallel mLSTM: exact recurrence across chunks, quadratic
+    form inside each chunk.  Returns (hidden (B,S,h,hd) f32, final state)."""
+    B, S, D = x.shape
+    h, hd = c.n_heads, c.head_dim
+    L = min(MLSTM_CHUNK, S)
+    if S % L:
+        raise ValueError(f"seq len {S} must be divisible by chunk {L}")
+    nc = S // L
+    q, k, v = _mlstm_qkv(p, c, x)
+    i, logf = _mlstm_gates(p, x)          # (B,S,h)
+
+    def reshape_c(t):  # (B,S,...) -> (nc,B,L,...)
+        return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, is_, lfs = map(reshape_c, (q, k, v, i, logf))
+
+    def step(state, xs):
+        qc, kc, vc, ic, lfc = xs          # (B,L,h,hd) / (B,L,h)
+        M0, n0, m0 = state["M"], state["n"], state["m"]
+        F = jnp.cumsum(lfc, axis=1)       # (B,L,h) log decay within chunk
+        # intra-chunk: D_ts = F_t - F_s + i_s (s <= t)
+        logits = F[:, :, None, :] - F[:, None, :, :] + ic[:, None, :, :]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        logits = jnp.where(causal[None, :, :, None], logits, -jnp.inf)
+        m_intra = jnp.max(logits, axis=2)             # (B,L,h)
+        log_inter = F + m0[:, None, :]                # state weight for query t
+        m_t = jnp.maximum(m_intra, log_inter)
+        dmat = jnp.exp(logits - m_t[:, :, None, :])   # (B,t,s,h)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc) * dmat
+        w_inter = jnp.exp(log_inter - m_t)            # (B,L,h)
+        num = (jnp.einsum("btsh,bshk->bthk", scores, vc)
+               + w_inter[..., None] * jnp.einsum("bthk,bhkv->bthv", qc, M0))
+        den = (jnp.einsum("btsh,bshk->bth", scores, kc)
+               + w_inter * jnp.einsum("bthk,bhk->bth", qc, n0))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        hid = num / den[..., None]                    # (B,L,h,hd)
+        # state update to end of chunk
+        Fl = F[:, -1:, :]                             # (B,1,h)
+        logw = Fl - F + ic                            # weight of step s
+        m_new = jnp.maximum(Fl[:, 0] + m0, jnp.max(logw, axis=1))
+        wst = jnp.exp(logw - m_new[:, None])
+        M = (jnp.exp(Fl[:, 0] + m0 - m_new)[..., None, None] * M0
+             + jnp.einsum("bsh,bshk,bshv->bhkv", wst, kc, vc))
+        n = (jnp.exp(Fl[:, 0] + m0 - m_new)[..., None] * n0
+             + jnp.einsum("bsh,bshk->bhk", wst, kc))
+        return {"M": M, "n": n, "m": m_new}, hid
+
+    state, hids = jax.lax.scan(step, state0, (qs, ks, vs, is_, lfs))
+    hid = hids.swapaxes(0, 1).reshape(B, S, h, hd)
+    return hid, state
+
+
+def _mlstm_state0(c: XlstmConfig, B: int):
+    h, hd = c.n_heads, c.head_dim
+    return {
+        "M": jnp.zeros((B, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, h, hd), jnp.float32),
+        "m": jnp.full((B, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_forward(p, c: XlstmConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B = x.shape[0]
+    hid, _ = _mlstm_chunk_scan(p, c, x, _mlstm_state0(c, B))
+    o = jax.nn.sigmoid(x @ p["ogate"])
+    y = jnp.einsum("bthk,hkd->btd", hid.astype(x.dtype), p["w_o"])
+    return y * o
+
+
+def mlstm_prefill(p, c: XlstmConfig, x: jnp.ndarray):
+    B = x.shape[0]
+    hid, state = _mlstm_chunk_scan(p, c, x, _mlstm_state0(c, B))
+    o = jax.nn.sigmoid(x @ p["ogate"])
+    y = jnp.einsum("bthk,hkd->btd", hid.astype(x.dtype), p["w_o"]) * o
+    return y, state
+
+
+def mlstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
+    """One-step recurrence. x: (B,1,D)."""
+    B = x.shape[0]
+    h, hd = c.n_heads, c.head_dim
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_q"]).astype(jnp.float32)
+    k = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_k"]).astype(jnp.float32) / (hd ** 0.5)
+    v = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_v"]).astype(jnp.float32)
+    i, logf = _mlstm_gates(p, x[:, 0])
+    m_new = jnp.maximum(logf + state["m"], i)
+    fw = jnp.exp(logf + state["m"] - m_new)[..., None]
+    iw = jnp.exp(i - m_new)[..., None]
+    M = state["M"] * fw[..., None] + iw[..., None] * k[..., None] * v[..., None, :]
+    n = state["n"] * fw + iw * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, M)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype)
+    o = jax.nn.sigmoid(x[:, 0] @ p["ogate"])
+    y = jnp.einsum("bhk,hkd->bd", out, p["w_o"]) * o
+    return y[:, None], {"M": M, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_specs(c: XlstmConfig):
+    d, h, hd = c.d_model, c.n_heads, c.head_dim
+    return {
+        "w_z": sds((d, d), c.dtype), "w_i": sds((d, h), c.dtype),
+        "w_f": sds((d, h), c.dtype), "w_og": sds((d, d), c.dtype),
+        "b_i": sds((h,), jnp.float32), "b_f": sds((h,), jnp.float32),
+        "w_out": sds((d, d), c.dtype),
+    }
+
+
+def slstm_state_specs(c: XlstmConfig, batch: int):
+    return {
+        "c": sds((batch, c.n_heads, c.head_dim), jnp.float32),
+        "n": sds((batch, c.n_heads), jnp.float32),
+        "m": sds((batch, c.n_heads), jnp.float32),
+    }
+
+
+def _slstm_step(p, c: XlstmConfig, state, inputs):
+    z_t, i_t, logf_t, _ = inputs
+    m_new = jnp.maximum(logf_t + state["m"], i_t)
+    fw = jnp.exp(logf_t + state["m"] - m_new)
+    iw = jnp.exp(i_t - m_new)
+    cell = state["c"] * fw[..., None] + iw[..., None] * z_t
+    n = state["n"] * fw + iw
+    h = cell / jnp.maximum(n, 1.0)[..., None]
+    return {"c": cell, "n": n, "m": m_new}, h
+
+
+def _slstm_inputs(p, c: XlstmConfig, x):
+    B, S, D = x.shape
+    z = jnp.tanh((x @ p["w_z"]).astype(jnp.float32)).reshape(B, S, c.n_heads, c.head_dim)
+    i = (x @ p["w_i"]).astype(jnp.float32) + p["b_i"]
+    f = (x @ p["w_f"]).astype(jnp.float32) + p["b_f"]
+    logf = -jax.nn.softplus(-f)
+    og = jax.nn.sigmoid(x @ p["w_og"])
+    return z, i, logf, og
+
+
+def slstm_forward(p, c: XlstmConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, D = x.shape
+    z, i, logf, og = _slstm_inputs(p, c, x)
+    state0 = {
+        "c": jnp.zeros((B, c.n_heads, c.head_dim), jnp.float32),
+        "n": jnp.zeros((B, c.n_heads), jnp.float32),
+        "m": jnp.full((B, c.n_heads), -1e30, jnp.float32),
+    }
+
+    def step(st, xs):
+        return _slstm_step(p, c, st, xs)
+
+    _, hs = jax.lax.scan(
+        step, state0,
+        (z.swapaxes(0, 1), i.swapaxes(0, 1), logf.swapaxes(0, 1),
+         jnp.zeros((S, 1), jnp.float32)),
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    return (h * og) @ p["w_out"]
+
+
+def slstm_prefill(p, c: XlstmConfig, x: jnp.ndarray):
+    B, S, D = x.shape
+    z, i, logf, og = _slstm_inputs(p, c, x)
+    state0 = {
+        "c": jnp.zeros((B, c.n_heads, c.head_dim), jnp.float32),
+        "n": jnp.zeros((B, c.n_heads), jnp.float32),
+        "m": jnp.full((B, c.n_heads), -1e30, jnp.float32),
+    }
+
+    def step(st, xs):
+        return _slstm_step(p, c, st, xs)
+
+    state, hs = jax.lax.scan(
+        step, state0,
+        (z.swapaxes(0, 1), i.swapaxes(0, 1), logf.swapaxes(0, 1),
+         jnp.zeros((S, 1), jnp.float32)),
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    return (h * og) @ p["w_out"], state
+
+
+def slstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
+    z, i, logf, og = _slstm_inputs(p, c, x)
+    new_state, h = _slstm_step(
+        p, c, state, (z[:, 0], i[:, 0], logf[:, 0], None)
+    )
+    B, D = x.shape[0], x.shape[2]
+    h = h.reshape(B, D).astype(x.dtype)
+    y = (h * og[:, 0]) @ p["w_out"]
+    return y[:, None], new_state

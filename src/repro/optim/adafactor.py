@@ -1,0 +1,99 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no first moment
+by default — the production optimizer for models whose AdamW state cannot fit
+HBM (here: kimi-k2's 1T params on 16 GB/chip pods; T5/PaLM lineage).
+
+State per >=2D weight: row factor (prod of leading dims,) + col factor
+(last dim,) in f32 — ~(r+c)/(r*c) of AdamW's 2x f32.  1D params fall back to
+unfactored second moment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-3
+    decay: float = 0.8            # beta2_t = 1 - t^-decay
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Pytree) -> Pytree:
+    def st(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)   # reduce over last dim
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"vr": row, "vc": col}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"factors": jax.tree.map(st, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_state_specs(param_specs: Pytree) -> Pytree:
+    def st(s):
+        if _factored(s.shape):
+            return {
+                "vr": jax.ShapeDtypeStruct(s.shape[:-1], jnp.float32),
+                "vc": jax.ShapeDtypeStruct(s.shape[:-2] + s.shape[-1:], jnp.float32),
+            }
+        return {"v": jax.ShapeDtypeStruct(s.shape, jnp.float32)}
+    return {
+        "factors": jax.tree.map(st, param_specs),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: AdafactorConfig, grads: Pytree, state: Pytree,
+                     params: Pytree, lr=None):
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    lr_t = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps1
+        if _factored(p.shape):
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # v_hat ~ vr vc / mean(vr)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            vhat = (vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(denom[..., None], cfg.eps1))
+            u = g * jax.lax.rsqrt(jnp.maximum(vhat, cfg.eps1))
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, cfg.eps1))
+            new_st = {"v": v}
+        # update clipping (RMS(u) <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        scale = jnp.maximum(cfg.eps2, jnp.sqrt(jnp.mean(
+            p.astype(jnp.float32) ** 2)))
+        newp = (p.astype(jnp.float32) - lr_t * scale * u
+                - lr_t * cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["factors"])
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_factors = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return new_params, {"factors": new_factors, "count": count}, {
+        "lr": lr_t, "grad_norm": jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2) for g in flat_g)),
+    }

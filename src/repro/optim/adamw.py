@@ -1,0 +1,96 @@
+"""AdamW with global-norm clipping and cosine schedule, pure JAX.
+
+Optimizer state inherits the params' sharding (specs mirror the param tree),
+so with FSDP-sharded params the moments are ZeRO-sharded for free.  Moments
+are f32 regardless of param dtype (bf16-safe).  Gradient compression option:
+`compress="bf16"` casts gradients before the (XLA-inserted) all-reduce —
+halves gradient collective bytes at the usual negligible quality cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress: str | None = None     # None | "bf16" gradient compression
+
+
+def adamw_init(params: Pytree) -> Pytree:
+    """Moment state (f32) shaped like params; count is a scalar."""
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_state_specs(param_specs: Pytree) -> Pytree:
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, param_specs),
+        "nu": jax.tree.map(f32, param_specs),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)
+    ))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Pytree, state: Pytree, params: Pytree,
+                 lr: jnp.ndarray | float | None = None):
+    """Returns (new_params, new_state, metrics)."""
+    if cfg.compress == "bf16":
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr_t = jnp.asarray(cfg.lr if lr is None else lr, jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state["nu"], grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}, {
+        "grad_norm": gnorm, "lr": lr_t,
+    }
+
+
+def cosine_lr(step: jnp.ndarray, *, peak: float, warmup: int, total: int,
+              floor_frac: float = 0.1) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(1, warmup)
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

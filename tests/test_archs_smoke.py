@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config, one train step + one decode
+step on CPU, asserting output shapes and finite values (assignment req (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, cells_for
+from repro.models import registry
+from repro.models import transformer as tf
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def make_batch(cfg, key=KEY, batch=B, seq=S):
+    b = {"labels": jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.input_mode == "tokens":
+        b["tokens"] = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    else:
+        b["embeds"] = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+    if cfg.encoder_tokens:
+        b["enc"] = jax.random.normal(key, (batch, cfg.encoder_tokens, cfg.d_model),
+                                     jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_NAMES)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = registry.get_config(arch, smoke=True)
+        params = tf.init_params(cfg, KEY)
+        batch = make_batch(cfg)
+        loss, grads = jax.jit(jax.value_and_grad(
+            lambda p: tf.loss_fn(p, cfg, batch)))(params)
+        assert np.isfinite(float(loss))
+        for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+            assert np.isfinite(np.asarray(g, np.float32)).all(), path
+
+    def test_forward_shapes(self, arch):
+        cfg = registry.get_config(arch, smoke=True)
+        params = tf.init_params(cfg, KEY)
+        batch = make_batch(cfg)
+        logits = jax.jit(lambda p: tf.forward(p, cfg, batch))(params)
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_prefill_decode(self, arch):
+        cfg = registry.get_config(arch, smoke=True)
+        params = tf.init_params(cfg, KEY)
+        batch = make_batch(cfg)
+        logits, caches = jax.jit(
+            lambda p, b: tf.prefill(p, cfg, b, max_len=S + 4))(params, batch)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        inp = (tok if cfg.input_mode == "tokens"
+               else jax.random.normal(KEY, (B, 1, cfg.d_model)))
+        lg, caches2 = jax.jit(
+            lambda p, t, c: tf.decode_step(p, cfg, t, c, S,
+                                           enc=batch.get("enc")))(params, inp, caches)
+        assert lg.shape == (B, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(lg)).all()
+        # cache structure preserved
+        assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+    def test_param_specs_match_init(self, arch):
+        cfg = registry.get_config(arch, smoke=True)
+        specs = tf.param_specs(cfg)
+        params = tf.init_params(cfg, KEY)
+        spec_shapes = jax.tree.map(lambda s: s.shape, specs)
+        got_shapes = jax.tree.map(lambda a: a.shape, params)
+        assert spec_shapes == got_shapes
+
+
+class TestAssignment:
+    def test_full_configs_match_assignment(self):
+        """Spot-check the literal assigned hyperparameters."""
+        expect = {
+            "xlstm-1.3b": dict(num_layers=48, d_model=2048, num_heads=4, d_ff=0,
+                               vocab_size=50304),
+            "kimi-k2-1t-a32b": dict(num_layers=61, d_model=7168, num_heads=64,
+                                    num_kv_heads=8, moe_d_ff=2048,
+                                    vocab_size=163840, num_experts=384,
+                                    experts_per_token=8),
+            "deepseek-v2-lite-16b": dict(num_layers=27, d_model=2048,
+                                         num_heads=16, moe_d_ff=1408,
+                                         vocab_size=102400, num_experts=64,
+                                         experts_per_token=6, kv_lora_rank=512),
+            "h2o-danube-1.8b": dict(num_layers=24, d_model=2560, num_heads=32,
+                                    num_kv_heads=8, d_ff=6912, vocab_size=32000),
+            "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                               num_kv_heads=8, d_ff=15360, vocab_size=262144),
+            "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                             num_kv_heads=4, d_ff=18944, vocab_size=152064,
+                             qkv_bias=True),
+            "qwen1.5-0.5b": dict(num_layers=24, d_model=1024, num_heads=16,
+                                 num_kv_heads=16, d_ff=2816, vocab_size=151936,
+                                 qkv_bias=True),
+            "musicgen-large": dict(num_layers=48, d_model=2048, num_heads=32,
+                                   num_kv_heads=32, d_ff=8192, vocab_size=2048),
+            "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096,
+                                         num_heads=32, num_kv_heads=8,
+                                         d_ff=14336, vocab_size=128256),
+            "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                                d_ff=10240, vocab_size=32000, ssm_state_dim=64),
+        }
+        for name, fields in expect.items():
+            cfg = registry.get_config(name)
+            for k, v in fields.items():
+                assert getattr(cfg, k) == v, (name, k, getattr(cfg, k), v)
+
+    def test_cell_assignment(self):
+        """34 dry-run cells: long_500k only for the 4 sub-quadratic archs."""
+        total = 0
+        longs = []
+        for name in registry.ARCH_NAMES:
+            cfg = registry.get_config(name)
+            cells = cells_for(cfg)
+            total += len(cells)
+            if "long_500k" in cells:
+                longs.append(name)
+        assert total == 34
+        assert sorted(longs) == sorted(
+            ["xlstm-1.3b", "zamba2-2.7b", "h2o-danube-1.8b", "gemma3-12b"])
+
+    def test_param_count_sanity(self):
+        """Full configs land near their published sizes."""
+        cfg = registry.get_config("kimi-k2-1t-a32b")
+        assert 0.9e12 < cfg.total_params() < 1.15e12
+        assert 30e9 < cfg.active_params() < 40e9
+        assert 14e9 < registry.get_config("deepseek-v2-lite-16b").total_params() < 17e9
+        assert 7e9 < registry.get_config("qwen2-7b").total_params() < 8.2e9

@@ -1,0 +1,118 @@
+"""Unit + property tests for the paper's analytic model (Eqs 1-9)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical as ana
+from repro.core.analytical import PimConfig
+
+PAPER_CFG = PimConfig(size_macro=32 * 32, size_ou=4 * 8, s=4.0)  # paper Fig 4 setup
+
+
+class TestFig4:
+    """Fig 4: naive ping-pong utilization peaks at n_in=8 for the paper config."""
+
+    def test_peak_at_matched_point(self):
+        c = PAPER_CFG.with_(n_in=8)
+        assert c.time_pim == c.time_rewrite
+        assert ana.naive_pp_macro_util(c) == pytest.approx(1.0)
+
+    @pytest.mark.parametrize("n_in,util", [(1, 0.5625), (2, 0.625), (4, 0.75),
+                                           (8, 1.0), (16, 0.75), (32, 0.625), (64, 0.5625)])
+    def test_curve_values(self, n_in, util):
+        assert ana.naive_pp_macro_util(PAPER_CFG.with_(n_in=n_in)) == pytest.approx(util)
+
+    @given(st.floats(0.25, 512))
+    def test_symmetry_in_ratio(self, n_in):
+        """util(ratio) == util(1/ratio): Eqs 1-2 are symmetric around t_pim==t_rw."""
+        c = PAPER_CFG.with_(n_in=n_in)
+        c_inv = PAPER_CFG.with_(n_in=PAPER_CFG.size_ou**2 / (PAPER_CFG.s**2 * n_in))
+        assert math.isclose(c.ratio, 1.0 / c_inv.ratio, rel_tol=1e-9)
+        assert ana.naive_pp_macro_util(c) == pytest.approx(ana.naive_pp_macro_util(c_inv))
+
+    @given(st.floats(0.01, 1e4))
+    def test_bounded(self, n_in):
+        u = ana.naive_pp_macro_util(PAPER_CFG.with_(n_in=n_in))
+        assert 0.5 < u <= 1.0
+
+
+class TestEq34:
+    def test_insitu_count(self):
+        c = PimConfig(band=128, s=4)
+        assert ana.num_macros(c, "insitu") == 32
+
+    def test_naive_doubles_insitu(self):
+        c = PimConfig(band=128, s=4)
+        assert ana.num_macros(c, "naive_pp") == 2 * ana.num_macros(c, "insitu")
+
+    @given(st.floats(0.5, 256), st.floats(1, 8), st.floats(16, 1024))
+    def test_gpp_dominates(self, n_in, s, band):
+        """GPP supports >= as many macros as naive pp iff t_pim >= t_rw."""
+        c = PimConfig(n_in=n_in, s=s, band=band)
+        g, n = ana.num_macros(c, "gpp"), ana.num_macros(c, "naive_pp")
+        if c.time_pim >= c.time_rewrite:
+            assert g >= n * (1 - 1e-9)
+        else:
+            assert g <= n * (1 + 1e-9)
+
+    @given(st.floats(0.5, 256), st.floats(1, 8))
+    def test_gpp_bandwidth_exactly_saturated(self, n_in, s):
+        """num_gpp * per-macro average demand == band (the design identity)."""
+        c = PimConfig(n_in=n_in, s=s, band=128.0)
+        total = ana.num_macros(c, "gpp") * ana.per_macro_bandwidth(c, "gpp")
+        assert total == pytest.approx(c.band)
+
+
+class TestEq56:
+    def test_matched_point_equivalence(self):
+        """At t_pim == t_rw naive and gpp coincide (paper §IV-B)."""
+        c = PimConfig(n_in=PimConfig().size_ou / PimConfig().s)
+        assert c.time_pim == pytest.approx(c.time_rewrite)
+        g, i, n = ana.macro_count_ratio(c)
+        assert g == pytest.approx(n)
+        tg, ti, tn = ana.execution_time_ratio(c)
+        assert tg == pytest.approx(tn)
+        assert ti == pytest.approx(2.0 * tg)  # 2x over in-situ, as in Fig 6
+
+    @given(st.floats(0.26, 250))
+    def test_gpp_never_slower(self, n_in):
+        tg, ti, tn = ana.execution_time_ratio(PimConfig(n_in=n_in))
+        assert tg <= ti + 1e-9
+        assert tg <= tn + 1e-9
+
+
+class TestEq789:
+    CFG = PimConfig(size_macro=1024, size_ou=32, s=8.0, n_in=4.0, band=512.0)
+
+    def test_no_reduction_is_identity(self):
+        assert ana.insitu_perf_degradation(self.CFG, 1.0) == pytest.approx(1.0)
+        assert ana.naive_pp_perf_degradation(self.CFG, 1.0) == pytest.approx(1.0)
+        assert ana.gpp_perf_degradation(self.CFG, 1.0) == pytest.approx(1.0)
+
+    @pytest.mark.parametrize("n,expect", [(2, 0.7808), (4, 0.5931), (8, 0.4414),
+                                          (16, 0.3237), (32, 0.2349), (64, 0.1691)])
+    def test_eq9_matches_table2_theory(self, n, expect):
+        """Eq 9 at the Table II design point reproduces the theory column."""
+        assert ana.gpp_perf_degradation(self.CFG, n) == pytest.approx(expect, abs=2e-4)
+
+    def test_paper_headline_5_38x(self):
+        """At band/64, GPP retains 5.38x more perf than in-situ (paper §V-C)."""
+        g = ana.gpp_perf_degradation(self.CFG, 64)
+        i = ana.insitu_perf_degradation(self.CFG, 64)
+        assert g / i == pytest.approx(5.49, abs=0.15)  # paper reports 5.38 (integer practice)
+
+    @given(st.floats(1, 128))
+    def test_gpp_retains_most(self, n):
+        """GPP >= in-situ >= naive for all reductions (the paper's ordering)."""
+        g = ana.gpp_perf_degradation(self.CFG, n)
+        i = ana.insitu_perf_degradation(self.CFG, n)
+        na = ana.naive_pp_perf_degradation(self.CFG, n)
+        assert g >= i - 1e-9
+        assert i >= na - 1e-9
+
+    @given(st.floats(1, 128), st.floats(1.01, 4))
+    def test_monotone_degradation(self, n, factor):
+        for fn in (ana.insitu_perf_degradation, ana.naive_pp_perf_degradation,
+                   ana.gpp_perf_degradation):
+            assert fn(self.CFG, n * factor) <= fn(self.CFG, n) + 1e-9

@@ -1,0 +1,266 @@
+"""Model-component correctness: decode == forward (recurrence equivalence),
+MoE dispatch vs dense oracle, windowed attention masks, MLA cache math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import init_from_specs
+
+KEY = jax.random.PRNGKey(42)
+B, S, D = 2, 16, 32
+
+
+def init(specs, key=KEY):
+    return init_from_specs(specs, key)
+
+
+def seq_input(d=D, s=S, key=KEY):
+    return jax.random.normal(key, (B, s, d), jnp.float32) * 0.5
+
+
+class TestGQA:
+    CFG = attn.AttnConfig(d_model=D, num_heads=4, num_kv_heads=2, head_dim=8,
+                          dtype=jnp.float32)
+
+    def test_prefill_decode_matches_forward(self):
+        """Teacher-forced decode must reproduce the parallel forward."""
+        p = init(attn.attn_specs(self.CFG))
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        full = attn.gqa_forward(p, self.CFG, x, pos)
+        half = S // 2
+        out_pre, cache = attn.gqa_prefill(p, self.CFG, x[:, :half],
+                                          pos[:, :half], max_len=S)
+        np.testing.assert_allclose(np.asarray(out_pre), np.asarray(full[:, :half]),
+                                   rtol=2e-4, atol=2e-4)
+        outs = []
+        for t in range(half, S):
+            o, cache = attn.gqa_decode(p, self.CFG, x[:, t:t+1], cache, t)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_causality(self):
+        """Future tokens must not affect past outputs."""
+        p = init(attn.attn_specs(self.CFG))
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y1 = attn.gqa_forward(p, self.CFG, x, pos)
+        x2 = x.at[:, -1].set(x[:, -1] + 100.0)
+        y2 = attn.gqa_forward(p, self.CFG, x2, pos)
+        np.testing.assert_allclose(np.asarray(y1[:, :-1]), np.asarray(y2[:, :-1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_window_limits_receptive_field(self):
+        cfg = attn.AttnConfig(d_model=D, num_heads=4, num_kv_heads=2, head_dim=8,
+                              window=4, dtype=jnp.float32)
+        p = init(attn.attn_specs(cfg))
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y1 = attn.gqa_forward(p, cfg, x, pos)
+        # perturb token 0: outputs at t >= window must be unchanged
+        x2 = x.at[:, 0].set(x[:, 0] + 100.0)
+        y2 = attn.gqa_forward(p, cfg, x2, pos)
+        np.testing.assert_allclose(np.asarray(y1[:, 4:]), np.asarray(y2[:, 4:]),
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(y1[:, 0]), np.asarray(y2[:, 0]))
+
+    def test_window_ring_decode_matches_forward(self):
+        cfg = attn.AttnConfig(d_model=D, num_heads=4, num_kv_heads=2, head_dim=8,
+                              window=4, dtype=jnp.float32)
+        p = init(attn.attn_specs(cfg))
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        full = attn.gqa_forward(p, cfg, x, pos)
+        half = S // 2
+        out_pre, cache = attn.gqa_prefill(p, cfg, x[:, :half], pos[:, :half],
+                                          max_len=S)
+        outs = []
+        for t in range(half, S):
+            o, cache = attn.gqa_decode(p, cfg, x[:, t:t+1], cache, t)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_qkv_bias_changes_output(self):
+        cfg = attn.AttnConfig(d_model=D, num_heads=4, num_kv_heads=2, head_dim=8,
+                              qkv_bias=True, dtype=jnp.float32)
+        p = init(attn.attn_specs(cfg))
+        assert "b_q" in p
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y0 = attn.gqa_forward(p, cfg, x, pos)
+        p2 = dict(p, b_q=p["b_q"] + 1.0)
+        y1 = attn.gqa_forward(p2, cfg, x, pos)
+        assert not np.allclose(np.asarray(y0), np.asarray(y1))
+
+
+class TestMLA:
+    CFG = attn.AttnConfig(d_model=D, num_heads=4, num_kv_heads=4, head_dim=8,
+                          kv_lora_rank=16, rope_head_dim=4, dtype=jnp.float32)
+
+    def test_prefill_decode_matches_forward(self):
+        p = init(attn.attn_specs(self.CFG))
+        x = seq_input()
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        full = attn.mla_forward(p, self.CFG, x, pos)
+        half = S // 2
+        _, cache = attn.mla_prefill(p, self.CFG, x[:, :half], pos[:, :half],
+                                    max_len=S)
+        outs = []
+        for t in range(half, S):
+            o, cache = attn.mla_decode(p, self.CFG, x[:, t:t+1], cache, t)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_cache_is_compressed(self):
+        """The MLA cache must be (kv_lora + rope) wide, not heads*hd*2."""
+        sp = attn.cache_specs(self.CFG, batch=B, max_len=S)
+        cache_floats = sum(np.prod(s.shape) for s in jax.tree.leaves(sp))
+        gqa_floats = B * S * self.CFG.num_kv_heads * self.CFG.head_dim * 2
+        assert cache_floats < gqa_floats
+
+
+class TestMoE:
+    CFG = moe_mod.MoeConfig(d_model=D, d_ff=24, num_experts=8,
+                            experts_per_token=2, capacity_factor=8.0,
+                            dtype=jnp.float32)
+
+    def test_matches_dense_oracle_at_high_capacity(self):
+        """With capacity >= tokens, sort-dispatch == explicit per-token loop."""
+        p = init(moe_mod.moe_specs(self.CFG))
+        x = seq_input()
+        y = moe_mod.moe_apply(p, self.CFG, x)
+
+        # oracle: per-token dense computation
+        xt = np.asarray(x.reshape(-1, D), np.float64)
+        logits = xt @ np.asarray(p["router"], np.float64)
+        probs = np.exp(logits - logits.max(-1, keepdims=True))
+        probs /= probs.sum(-1, keepdims=True)
+        top_e = np.argsort(-probs, axis=-1)[:, :2]
+        out = np.zeros_like(xt)
+        for t in range(xt.shape[0]):
+            ws = probs[t, top_e[t]]
+            ws = ws / ws.sum()
+            for e, w in zip(top_e[t], ws):
+                wg = np.asarray(p["w_gate"][e], np.float64)
+                wu = np.asarray(p["w_up"][e], np.float64)
+                wd = np.asarray(p["w_down"][e], np.float64)
+                h = xt[t] @ wg
+                h = h / (1 + np.exp(-h)) * (xt[t] @ wu)
+                out[t] += w * (h @ wd)
+        np.testing.assert_allclose(np.asarray(y.reshape(-1, D)), out,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_capacity_drops_tokens_not_nan(self):
+        cfg = dataclass_replace(self.CFG, capacity_factor=0.25)
+        p = init(moe_mod.moe_specs(cfg))
+        x = seq_input()
+        y = moe_mod.moe_apply(p, cfg, x)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_shared_expert_added(self):
+        cfg = dataclass_replace(self.CFG, num_shared_experts=1)
+        p = init(moe_mod.moe_specs(cfg))
+        x = seq_input()
+        y = moe_mod.moe_apply(p, cfg, x)
+        p0 = dict(p, shared=jax.tree.map(jnp.zeros_like, p["shared"]))
+        y0 = moe_mod.moe_apply(p0, cfg, x)
+        assert not np.allclose(np.asarray(y), np.asarray(y0))
+
+    def test_grad_flows_to_router(self):
+        p = init(moe_mod.moe_specs(self.CFG))
+        x = seq_input()
+        g = jax.grad(lambda pp: (moe_mod.moe_apply(pp, self.CFG, x) ** 2).mean())(p)
+        assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def dataclass_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+class TestSSM:
+    CFG = ssm_mod.SsmConfig(d_model=D, d_inner=2 * D, d_state=8, n_heads=4,
+                            dtype=jnp.float32)
+
+    def test_decode_matches_forward(self):
+        p = init(ssm_mod.ssm_specs(self.CFG))
+        x = seq_input()
+        full = ssm_mod.ssm_forward(p, self.CFG, x)
+        half = S // 2
+        y_pre, state = ssm_mod.ssm_prefill(p, self.CFG, x[:, :half])
+        np.testing.assert_allclose(np.asarray(y_pre), np.asarray(full[:, :half]),
+                                   rtol=1e-4, atol=1e-4)
+        outs = []
+        for t in range(half, S):
+            o, state = ssm_mod.ssm_decode(p, self.CFG, x[:, t:t+1], state)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_state_is_constant_size(self):
+        sp = ssm_mod.ssm_state_specs(self.CFG, batch=B)
+        n = sum(np.prod(s.shape) for s in jax.tree.leaves(sp))
+        assert n < 10_000  # O(1) in sequence length: the long_500k enabler
+
+
+class TestXLSTM:
+    CFG = xlstm_mod.XlstmConfig(d_model=D, n_heads=4, dtype=jnp.float32)
+
+    def test_mlstm_decode_matches_forward(self):
+        p = init(xlstm_mod.mlstm_specs(self.CFG))
+        x = seq_input()
+        full = xlstm_mod.mlstm_forward(p, self.CFG, x)
+        half = S // 2
+        y_pre, state = xlstm_mod.mlstm_prefill(p, self.CFG, x[:, :half])
+        np.testing.assert_allclose(np.asarray(y_pre), np.asarray(full[:, :half]),
+                                   rtol=1e-4, atol=1e-4)
+        outs = []
+        for t in range(half, S):
+            o, state = xlstm_mod.mlstm_decode(p, self.CFG, x[:, t:t+1], state)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_mlstm_chunk_invariance(self):
+        """Chunkwise scan must be exact: same output for any chunk size."""
+        p = init(xlstm_mod.mlstm_specs(self.CFG))
+        x = seq_input(s=32)
+        orig = xlstm_mod.MLSTM_CHUNK
+        try:
+            xlstm_mod.MLSTM_CHUNK = 8
+            y8 = xlstm_mod.mlstm_forward(p, self.CFG, x)
+            xlstm_mod.MLSTM_CHUNK = 32
+            y32 = xlstm_mod.mlstm_forward(p, self.CFG, x)
+        finally:
+            xlstm_mod.MLSTM_CHUNK = orig
+        np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_slstm_decode_matches_forward(self):
+        p = init(xlstm_mod.slstm_specs(self.CFG))
+        x = seq_input()
+        full = xlstm_mod.slstm_forward(p, self.CFG, x)
+        half = S // 2
+        y_pre, state = xlstm_mod.slstm_prefill(p, self.CFG, x[:, :half])
+        np.testing.assert_allclose(np.asarray(y_pre), np.asarray(full[:, :half]),
+                                   rtol=1e-4, atol=1e-4)
+        outs = []
+        for t in range(half, S):
+            o, state = xlstm_mod.slstm_decode(p, self.CFG, x[:, t:t+1], state)
+            outs.append(o)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                                   rtol=1e-3, atol=1e-3)

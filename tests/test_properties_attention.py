@@ -1,0 +1,82 @@
+"""Hypothesis property tests on attention invariants across random
+geometries — the ring-buffer SWA cache and chunk schedules especially."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models.layers import init_from_specs
+
+
+def _roundtrip(cfg, S, B, key):
+    p = init_from_specs(A.attn_specs(cfg), key)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model)) * 0.5
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = A.gqa_forward(p, cfg, x, pos)
+    half = S // 2
+    _, cache = A.gqa_prefill(p, cfg, x[:, :half], pos[:, :half], max_len=S)
+    outs = []
+    for t in range(half, S):
+        o, cache = A.gqa_decode(p, cfg, x[:, t:t + 1], cache, t)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, half:]),
+                               rtol=3e-4, atol=3e-4)
+
+
+class TestDecodeEquivalenceProperty:
+    @given(st.sampled_from([(4, 2), (4, 4), (6, 3), (8, 2)]),
+           st.sampled_from([8, 12, 16, 24]),
+           st.sampled_from([None, 3, 4, 6, 8]),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=12, deadline=None)
+    def test_ring_cache_decode_equals_forward(self, heads, S, window, seed):
+        """Teacher-forced decode through the (possibly ring) KV cache must
+        reproduce the parallel forward for arbitrary (H, KVH, S, window)."""
+        H, KVH = heads
+        cfg = A.AttnConfig(d_model=H * 8, num_heads=H, num_kv_heads=KVH,
+                           head_dim=8, window=window, dtype=jnp.float32)
+        _roundtrip(cfg, S, B=2, key=jax.random.PRNGKey(seed))
+
+    @given(st.integers(1, 64), st.integers(1, 512), st.integers(0, 600))
+    @settings(max_examples=60)
+    def test_ring_slot_positions_consistent(self, span, window, pos):
+        """The ring-buffer position reconstruction in gqa_decode: entry j
+        holds the latest absolute position p' <= pos with p' % span == j."""
+        j = np.arange(span)
+        kpos_abs = pos - ((pos - j) % span)
+        assert ((kpos_abs % span) == j).all()
+        assert (kpos_abs <= pos).all()
+        assert (kpos_abs > pos - span).all()
+
+
+class TestMaskProperties:
+    @given(st.integers(1, 32), st.integers(1, 48), st.integers(0, 64),
+           st.sampled_from([None, 1, 4, 16]))
+    @settings(max_examples=60, deadline=None)
+    def test_causal_mask_semantics(self, S, T, off, window):
+        m = np.asarray(A.causal_mask(S, T, off, window))
+        for i in range(S):
+            for t in range(T):
+                vis = t <= off + i
+                if window is not None:
+                    vis = vis and t > off + i - window
+                assert m[i, t] == vis, (i, t, off, window)
+
+    @given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_kv_chunk_size_invariance(self, nchunks, seed):
+        """_sdpa_kv_chunked must be exact for any chunk divisor."""
+        key = jax.random.PRNGKey(seed)
+        S = 24
+        q = jax.random.normal(key, (2, S, 4, 8))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, S, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, S, 2, 8))
+        ref = A._sdpa(q, k, v, A.causal_mask(S, S), 0.35)
+        if S % nchunks:
+            return
+        got = A._sdpa_kv_chunked(q, k, v, 0.35, chunk=S // nchunks)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)

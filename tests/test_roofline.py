@@ -1,0 +1,92 @@
+"""Unit tests for the roofline HLO analysis (launch/roofline.py) — the
+loop-aware parsers are load-bearing for §Roofline, so they get synthetic-HLO
+ground truth here."""
+import textwrap
+
+from repro.launch import roofline as rl
+
+# A synthetic optimized-HLO module: an entry with a while loop whose body
+# (known_trip_count=4) contains an all-gather and a dot, plus a nested loop
+# (trip 2) with an all-reduce.
+HLO = textwrap.dedent("""
+    HloModule jit_step, entry_computation_layout={(f32[8,16])->f32[8,16]}
+
+    %inner.body (p0: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p0 = (s32[], f32[8,16]) parameter(0)
+      %x1 = f32[8,16]{1,0} get-tuple-element(%p0), index=1
+      %ar = f32[8,16]{1,0} all-reduce(%x1), replica_groups={}, to_apply=%add
+      ROOT %t = (s32[], f32[8,16]) tuple(%c, %ar)
+    }
+
+    %outer.body (p1: (s32[], f32[8,16], f32[16,32])) -> (s32[], f32[8,16], f32[16,32]) {
+      %p1 = (s32[], f32[8,16], f32[16,32]) parameter(0)
+      %a = f32[8,16]{1,0} get-tuple-element(%p1), index=1
+      %w = f32[16,32]{1,0} get-tuple-element(%p1), index=2
+      %ag = f32[8,16]{1,0} all-gather(%a), dimensions={0}
+      %d = f32[8,32]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %wh = (s32[], f32[8,16]) while(%init), condition=%cond, body=%inner.body, backend_config={"known_trip_count":{"n":"2"}}
+      ROOT %t2 = (s32[], f32[8,16], f32[16,32]) tuple(%c2, %ag, %w)
+    }
+
+    ENTRY %main (arg: f32[8,16]) -> f32[8,16] {
+      %arg = f32[8,16]{1,0} parameter(0)
+      %w0 = f32[16,32]{1,0} constant(0)
+      %loop = (s32[], f32[8,16], f32[16,32]) while(%init2), condition=%cond2, body=%outer.body, backend_config={"known_trip_count":{"n":"4"}}
+      %ag0 = f32[8,16]{1,0} all-gather(%arg), dimensions={0}
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+    }
+""")
+
+
+class TestLoopAwareParsers:
+    def test_multipliers(self):
+        comps = rl._parse_computations(HLO)
+        assert set(comps) >= {"inner.body", "outer.body", "main"}
+        mults = rl._loop_multipliers(HLO, comps, default_layers=99)
+        assert mults["main"] == 1
+        assert mults["outer.body"] == 4          # known_trip_count 4
+        assert mults["inner.body"] == 8          # 4 x 2 nested
+
+    def test_collective_bytes(self):
+        colls = rl.collective_bytes_loop_aware(HLO, default_layers=99)
+        f32_8x16 = 8 * 16 * 4
+        # all-gather: 1x in entry + 4x in outer body = 5 executions
+        assert colls["all-gather"]["count"] == 5
+        assert colls["all-gather"]["bytes"] == 5 * f32_8x16
+        # all-reduce: 8 executions (nested)
+        assert colls["all-reduce"]["count"] == 8
+        assert colls["all-reduce"]["bytes"] == 8 * f32_8x16
+
+    def test_dot_flops_and_bytes(self):
+        flops, nbytes, cov = rl.dot_stats_loop_aware(HLO, default_layers=99)
+        assert cov == 1.0
+        # dot: (8,16)x(16,32) -> 2*8*32*16 flops, x4 loop executions
+        assert flops == 4 * 2 * 8 * 32 * 16
+        # operand bytes assume 2B storage + f32 output from the line
+        expect_operands = 2 * (8 * 16) + 2 * (16 * 32)
+        expect_out = 4 * (8 * 32)
+        assert nbytes == 4 * (expect_operands + expect_out)
+
+    def test_default_layers_fallback(self):
+        """A while without known_trip_count gets the default multiplier."""
+        hlo = HLO.replace('backend_config={"known_trip_count":{"n":"4"}}', "")
+        comps = rl._parse_computations(hlo)
+        mults = rl._loop_multipliers(hlo, comps, default_layers=7)
+        assert mults["outer.body"] == 7
+
+    def test_tensor_bytes(self):
+        assert rl._tensor_bytes("bf16[4,8]") == 64
+        assert rl._tensor_bytes("f32[2,2] bf16[2]") == 20
+        assert rl._tensor_bytes("pred[16]") == 16
+
+
+class TestModelFlops:
+    def test_train_vs_decode(self):
+        from repro.configs.base import SHAPES
+        from repro.models import registry
+        cfg = registry.get_config("qwen1.5-0.5b")
+        t = rl.model_flops(cfg, SHAPES["train_4k"])
+        d = rl.model_flops(cfg, SHAPES["decode_32k"])
+        n = cfg.active_params()
+        assert t == 6.0 * n * 4096 * 256
+        assert d == 2.0 * n * 128
