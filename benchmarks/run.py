@@ -1,18 +1,29 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (derived = the headline quantity the
-paper reports for that table/figure).  Run:  PYTHONPATH=src python -m benchmarks.run
+paper reports for that table/figure) and mirrors every row into
+``BENCH_kernels.json`` (name -> {us_per_call, derived}) so the perf
+trajectory is machine-readable across PRs.
+Run:  PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
 import math
 import time
+
+RESULTS: "dict[str, dict]" = {}
 
 
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
     return (time.perf_counter() - t0) * 1e6, out
+
+
+def _record(name: str, us: float, derived: str) -> None:
+    RESULTS[name] = {"us_per_call": round(us, 1), "derived": derived}
+    print(f"{name},{us:.1f},{derived}")
 
 
 def bench_fig4_naive_pp_utilization():
@@ -27,7 +38,7 @@ def bench_fig4_naive_pp_utilization():
         return curve
 
     us, curve = _timed(run)
-    print(f"fig4_naive_pp_utilization,{us:.1f},peak@n_in=8:util={curve[8]:.3f}")
+    _record("fig4_naive_pp_utilization", us, f"peak@n_in=8:util={curve[8]:.3f}")
 
 
 def bench_fig6_design_phase():
@@ -49,7 +60,7 @@ def bench_fig6_design_phase():
         return gpp_vs_naive, gpp_vs_insitu
 
     us, (vs_naive, vs_insitu) = _timed(run)
-    print(f"fig6_design_phase,{us:.1f},ratio1:7_gpp_speedup_vs_naive={vs_naive:.2f}x_vs_insitu={vs_insitu:.2f}x")
+    _record("fig6_design_phase", us, f"ratio1:7_gpp_speedup_vs_naive={vs_naive:.2f}x_vs_insitu={vs_insitu:.2f}x")
 
 
 def bench_fig7_runtime_adaptation():
@@ -65,7 +76,7 @@ def bench_fig7_runtime_adaptation():
         return g.perf_sim / i.perf_sim, g.perf_sim / n.perf_sim, g.bw_utilization
 
     us, (vs_insitu, vs_naive, bwu) = _timed(run)
-    print(f"fig7_runtime_adaptation,{us:.1f},band/64_gpp_vs_insitu={vs_insitu:.2f}x_vs_naive={vs_naive:.2f}x_bw_util={bwu:.2f}")
+    _record("fig7_runtime_adaptation", us, f"band/64_gpp_vs_insitu={vs_insitu:.2f}x_vs_naive={vs_naive:.2f}x_bw_util={bwu:.2f}")
 
 
 def bench_table2_theory_practice():
@@ -80,8 +91,9 @@ def bench_table2_theory_practice():
 
     us, (rows, worst) = _timed(run)
     r8 = next(r for r in rows if r.band == 8)
-    print(f"table2_theory_practice,{us:.1f},band8_macros={r8.macros_practice}"
-          f"_perf={r8.perf_practice:.4f}_maxgap={worst:.3f}")
+    _record("table2_theory_practice", us,
+            f"band8_macros={r8.macros_practice}"
+            f"_perf={r8.perf_practice:.4f}_maxgap={worst:.3f}")
 
 
 def bench_headline_1_67x():
@@ -106,7 +118,7 @@ def bench_headline_1_67x():
         return best
 
     us, best = _timed(run)
-    print(f"headline_full_bw,{us:.1f},gpp_vs_naive_best={best:.2f}x_(paper:>=1.67x)")
+    _record("headline_full_bw", us, f"gpp_vs_naive_best={best:.2f}x_(paper:>=1.67x)")
 
 
 def bench_kernel_gpp_matmul():
@@ -130,7 +142,7 @@ def bench_kernel_gpp_matmul():
         return plan_ring_depth(8, 256, 256)
 
     us, g_auto = _timed(run)
-    print(f"kernel_gpp_matmul,{us:.1f},allclose_G=1/2/4_auto_ring={g_auto}")
+    _record("kernel_gpp_matmul", us, f"allclose_G=1/2/4_auto_ring={g_auto}")
 
 
 def bench_kernel_cycle_model():
@@ -158,7 +170,7 @@ def bench_kernel_cycle_model():
 
     us, out = _timed(run)
     parts = "_".join(f"M{m}:{s:.2f}x(G={g})" for m, (s, g) in out.items())
-    print(f"kernel_cycle_model,{us:.1f},insitu_to_pipelined_{parts}")
+    _record("kernel_cycle_model", us, f"insitu_to_pipelined_{parts}")
 
 
 def bench_streamer_modes():
@@ -200,19 +212,76 @@ def bench_streamer_modes():
         return "4modes_allclose"
 
     us, res = _timed(run)
-    print(f"streamer_modes,{us:.1f},{res}")
+    _record("streamer_modes", us, str(res))
+
+
+def bench_kernel_tiled_vmem():
+    """Tiled 3-D-grid gpp_matmul at a shape whose naive (whole-M/whole-K
+    resident) working set exceeds the old 1-D kernel's ~100 MiB VMEM ceiling.
+
+    "before" = the pre-tiling configuration: the whole (M, K) activation
+    block plus a G x K x block_n weight ring resident — the planner rejects
+    it, exactly as the old kernel hard-errored.  "after" = the auto-planned
+    M/K-tiled kernel at the same shape, parity-checked against the oracle.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.schedule import matmul_vmem_bytes, plan_matmul_tiles
+    from repro.kernels.gpp_matmul import gpp_matmul
+    from repro.kernels.ref import matmul_ref
+
+    M, K, N, bn_old, G_old = 1024, 4096, 8192, 2048, 4
+    naive = matmul_vmem_bytes(M, bn_old, K, G_old,
+                              x_itemsize=4, w_itemsize=4, out_itemsize=4)
+
+    def run_before():
+        try:
+            plan_matmul_tiles(M, K, N, block_m=M, block_k=K, block_n=bn_old,
+                              num_bufs=G_old)
+        except ValueError:
+            return f"raises_ValueError(naive_ws={naive / 2**20:.0f}MiB)"
+        return "unexpectedly_fit"
+
+    us, derived = _timed(run_before)
+    _record("kernel_tiled_vmem_before", us, derived)
+
+    def run_after():
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(k1, (M, K), jnp.float32)
+        w = jax.random.normal(k2, (K, N), jnp.float32)
+        plan = plan_matmul_tiles(M, K, N)
+        y = gpp_matmul(x, w, interpret=True)
+        err = float(jnp.max(jnp.abs(y - matmul_ref(x, w))))
+        assert err < 5e-3, err
+        return plan, err
+
+    us, (plan, err) = _timed(run_after)
+    _record(
+        "kernel_tiled_vmem_after", us,
+        f"M{M}xK{K}xN{N}_blocks={plan.block_m}/{plan.block_n}/{plan.block_k}"
+        f"_G={plan.num_bufs}_vmem={plan.vmem_bytes / 2**20:.0f}MiB"
+        f"_maxerr={err:.1e}")
 
 
 def main() -> None:
     print("name,us_per_call,derived")
-    bench_fig4_naive_pp_utilization()
-    bench_fig6_design_phase()
-    bench_fig7_runtime_adaptation()
-    bench_table2_theory_practice()
-    bench_headline_1_67x()
-    bench_kernel_gpp_matmul()
-    bench_kernel_cycle_model()
-    bench_streamer_modes()
+    try:
+        bench_fig4_naive_pp_utilization()
+        bench_fig6_design_phase()
+        bench_fig7_runtime_adaptation()
+        bench_table2_theory_practice()
+        bench_headline_1_67x()
+        bench_kernel_gpp_matmul()
+        bench_kernel_cycle_model()
+        bench_kernel_tiled_vmem()
+        bench_streamer_modes()
+    finally:
+        # keep the partial perf record even if one benchmark dies mid-run
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(RESULTS, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote BENCH_kernels.json ({len(RESULTS)} entries)")
 
 
 if __name__ == "__main__":

@@ -56,6 +56,10 @@ class ModelConfig:
     dtype: str = "bfloat16"
     subquadratic: bool = False       # eligible for long_500k decode
     stream: StreamSettings = StreamSettings()
+    dense_kernel: str = "auto"       # dense-matmul routing (kernels.ops.dense):
+                                     # auto | ref | kernel | interpret — auto
+                                     # streams big weights through the GPP
+                                     # Pallas kernel on TPU, jnp elsewhere
     remat: str = "block"             # none | block  (activation checkpointing)
     optimizer: str = "adamw"         # adamw | adafactor (1T-scale state budget)
 

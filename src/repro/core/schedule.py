@@ -246,3 +246,149 @@ def plan_stream(
     ring = min(max_ring, max(2, math.ceil(t_tr / t_cmp) + 1))
     chunks = max(1, round(t_cmp / t_tr)) if t_tr > 0 else 1
     return StreamPlan(ring, chunks, t_cmp, t_tr)
+
+
+# ---------------------------------------------------------------------------
+# M/K/N tile planner for the streaming matmul kernel (kernels/gpp_matmul.py)
+# ---------------------------------------------------------------------------
+
+VMEM_BUDGET_BYTES = 100 * 1024 * 1024  # target TPU v5e ~128 MiB/core, headroom
+
+# TPU v5e hardware model — single source of truth, also used by kernels/ops.py
+PEAK_FLOPS = 197e12
+HBM_BYTES_PER_S = 819e9
+
+_LANE = 128     # TPU lane width: block_n granularity
+_SUBLANE = 8    # f32 sublane: block_m / block_k granularity
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulTilePlan:
+    """Tile sizes + ring depth for the 3-D-grid GPP streaming matmul.
+
+    The working set held on-chip is
+      ring:   num_bufs * block_k * block_n * w_itemsize   (weight ring)
+      x:      2 * block_m * block_k * x_itemsize          (pipelined in-block)
+      y:      2 * block_m * block_n * out_itemsize        (pipelined out-block)
+      acc:    block_m * block_n * 4                       (f32 accumulator)
+    """
+
+    block_m: int
+    block_n: int
+    block_k: int
+    num_bufs: int
+    vmem_bytes: int
+
+    def grid(self, M: int, N: int, K: int) -> "tuple[int, int, int]":
+        return (
+            -(-M // self.block_m),
+            -(-N // self.block_n),
+            -(-K // self.block_k),
+        )
+
+
+def matmul_vmem_bytes(block_m: int, block_n: int, block_k: int, num_bufs: int,
+                      *, x_itemsize: int, w_itemsize: int,
+                      out_itemsize: int) -> int:
+    return (
+        num_bufs * block_k * block_n * w_itemsize
+        + 2 * block_m * block_k * x_itemsize
+        + 2 * block_m * block_n * out_itemsize
+        + block_m * block_n * 4
+    )
+
+
+def plan_matmul_tiles(
+    M: int,
+    K: int,
+    N: int,
+    *,
+    x_itemsize: int = 4,
+    w_itemsize: int = 4,
+    out_itemsize: int = 4,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    num_bufs: int | None = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_ring: int = 8,
+    flops_per_s: float = PEAK_FLOPS,
+    transfer_bytes_per_s: float = HBM_BYTES_PER_S,
+) -> MatmulTilePlan:
+    """Pick (block_m, block_n, block_k, num_bufs) under the VMEM budget.
+
+    Caller-pinned dims are honored as-is; unpinned dims start from defaults
+    and shrink (block_k first, then block_m, then ring depth, then block_n)
+    until the working set fits, instead of erroring like the old 1-D kernel.
+    Raises only if the *pinned* configuration cannot fit at minimum sizes of
+    every free dim.
+    """
+    if M < 1 or K < 1 or N < 1:
+        raise ValueError(f"bad matmul shape M={M} K={K} N={N}")
+    if num_bufs is not None and num_bufs < 1:
+        raise ValueError("num_bufs >= 1")
+    bn = block_n if block_n is not None else min(_round_up(N, _LANE), 256)
+    bm = block_m if block_m is not None else min(_round_up(M, _SUBLANE), 512)
+    bk = block_k if block_k is not None else min(_round_up(K, _SUBLANE), 2048)
+
+    def ring_for(bm_, bk_, bn_):
+        if num_bufs is not None:
+            return num_bufs
+        plan = plan_stream(
+            block_bytes=bk_ * bn_ * w_itemsize,
+            compute_flops=2.0 * bm_ * bk_ * bn_,
+            flops_per_s=flops_per_s,
+            transfer_bytes_per_s=transfer_bytes_per_s,
+            max_ring=max_ring,
+        )
+        return plan.ring_depth
+
+    def fits(bm_, bk_, bn_, g_):
+        return matmul_vmem_bytes(
+            bm_, bn_, bk_, g_, x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+            out_itemsize=out_itemsize) <= vmem_budget
+
+    g = ring_for(bm, bk, bn)
+    while not fits(bm, bk, bn, g):
+        if block_k is None and bk > _LANE:
+            bk = max(_LANE, _round_up(bk // 2, _SUBLANE))
+        elif block_m is None and bm > _SUBLANE:
+            bm = max(_SUBLANE, _round_up(bm // 2, _SUBLANE))
+        elif num_bufs is None and g > 1:
+            g -= 1          # last resort ends at in-situ (G=1), a valid mode
+            continue
+        elif block_n is None and bn > _LANE:
+            bn = max(_LANE, _round_up(bn // 2, _LANE))
+        else:
+            used = matmul_vmem_bytes(
+                bm, bn, bk, g, x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+                out_itemsize=out_itemsize)
+            raise ValueError(
+                f"matmul working set {used / 2**20:.1f} MiB exceeds the "
+                f"{vmem_budget / 2**20:.0f} MiB VMEM budget even at minimum "
+                f"free-tile sizes (pinned: block_m={block_m} block_n={block_n} "
+                f"block_k={block_k} num_bufs={num_bufs})"
+            )
+        g = ring_for(bm, bk, bn)
+
+    # grow an unpinned block_m back toward M while the budget allows: every
+    # extra m-pass re-streams the whole weight matrix from HBM, which is
+    # exactly the traffic this kernel exists to minimize.
+    if block_m is None:
+        M_full = _round_up(M, _SUBLANE)
+        while bm < M_full:
+            bm_try = min(M_full, bm * 2)
+            g_try = ring_for(bm_try, bk, bn)
+            if not fits(bm_try, bk, bn, g_try):
+                break
+            bm, g = bm_try, g_try
+
+    used = matmul_vmem_bytes(
+        bm, bn, bk, g, x_itemsize=x_itemsize, w_itemsize=w_itemsize,
+        out_itemsize=out_itemsize)
+    return MatmulTilePlan(block_m=bm, block_n=bn, block_k=bk, num_bufs=g,
+                          vmem_bytes=used)

@@ -1,33 +1,47 @@
 """Generalized ping-pong streaming matmul — the paper's GeMM engine on TPU.
 
-y[M, N] = x[M, K] @ W[K, N] where W is too large to be VMEM-resident and
-streams from HBM ("off-chip") while the MXU computes — the PIM
+y[M, N] = epilogue(x[M, K] @ W[K, N]) where W is too large to be VMEM-resident
+and streams from HBM ("off-chip") while the MXU computes — the PIM
 concurrent-write/compute problem mapped to the TPU memory hierarchy
-(DESIGN.md §2.1):
+(DESIGN.md §2.1), now on a 3-D (num_m, num_n, num_k) grid so arbitrary M/K/N
+fit in VMEM:
 
-  PIM macro           ->  one (K, bn) weight tile resident in VMEM
+  PIM macro           ->  one (block_k, block_n) weight tile resident in VMEM
   weight rewrite      ->  async HBM->VMEM DMA into a ring slot
-  n_in input vectors  ->  the M rows matmul'd against the resident tile
+  n_in input vectors  ->  the block_m rows matmul'd against the resident tile
   off-chip bandwidth  ->  HBM DMA bandwidth
+  consecutive GeMMs   ->  the flattened sequence of grid steps: k innermost
+                          (f32 accumulator carried across), then n, then m
 
 Strategies (selected by `num_bufs`):
-  num_bufs == 1   in-situ: DMA tile j, wait, compute tile j (bursty, stalls)
+  num_bufs == 1   in-situ: DMA tile for step s, wait, compute (bursty, stalls)
   num_bufs == 2   naive ping-pong: classic double buffering — whole-tile DMA
-                  for j+1 issued while computing j
+                  for step s+1 issued while computing step s
   num_bufs >= 3   generalized ping-pong: ring of G buffers; while computing
-                  tile j, issue ONE CHUNK (1/(G-1) of a tile) for each of the
-                  G-1 upcoming tiles, so DMA traffic is flat at exactly one
+                  step s, issue ONE CHUNK (1/C of a tile, C = G-1) for each of
+                  the C upcoming steps, so DMA traffic is flat at exactly one
                   tile per compute step and the MXU never waits even when
                   t_dma > t_compute.
 
-The chunk schedule is the same one validated against the paper's analytic
-model: tile t's chunk c is issued at grid step t-(G-1)+c (clamped to 0 —
-pipeline-fill ramp), i.e. at step j we issue chunk (G-1-k) of tile j+k.
+The chunk schedule is the seed 1-D schedule re-derived over *global grid
+steps* instead of N-tiles: with S = num_m*num_n*num_k sequential steps, the
+weight tile needed at step s is tile(s) = s mod (num_n*num_k) (column tile
+n = tile//num_k, K-tile k = tile mod num_k), its ring slot is s mod G, and
+chunk c of step s's tile is issued at step s-C+c (steps < 0 fold into the
+step-0 pipeline-fill prologue).  Because the schedule is phrased in steps,
+the one-tile-per-step flat-bandwidth invariant holds across k-loop, n-loop
+and m-loop boundaries alike — including the ragged final tiles, which the
+wrapper zero-pads to full blocks.  Coverage proof:
+tests/test_kernels.py::TestSchedule.
 
-Grid steps on TPU run sequentially on one core, so DMA state (semaphore
-signals) persists across steps — the standard Pallas manual-multibuffering
-pattern.  Chunks split the K (sublane) dimension so each DMA keeps full
-128-lane rows.
+Grid steps on TPU run sequentially on one core ("arbitrary" dimension
+semantics), so DMA state (semaphore signals) persists across steps — the
+standard Pallas manual-multibuffering pattern.  Chunks split the block_k
+(sublane) dimension so each DMA keeps full 128-lane rows.
+
+Epilogue (fused into the last K step, before the output store, all in f32):
+  optional per-column dequant scale (int8/bf16 weights are DMA'd raw and
+  widened in-kernel), optional bias add, optional activation.
 """
 from __future__ import annotations
 
@@ -38,6 +52,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.schedule import plan_matmul_tiles
+
+# renamed CompilerParams -> TPUCompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+_ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}
+
 
 def _chunk_bounds(K: int, chunks: int, c: int) -> tuple[int, int]:
     base = K // chunks
@@ -46,136 +74,255 @@ def _chunk_bounds(K: int, chunks: int, c: int) -> tuple[int, int]:
     return lo, hi
 
 
-def _gpp_kernel(x_ref, w_hbm, y_ref, ring, sems, *, num_bufs: int, bn: int, K: int,
-                out_dtype):
-    """Pallas kernel body; grid = (num_tiles,) over N column-tiles of W."""
-    j = pl.program_id(0)
-    nt = pl.num_programs(0)
-    G = num_bufs
-    C = max(1, G - 1)  # chunks per tile
+def chunk_issue_schedule(num_steps: int, G: int,
+                         C: int) -> "dict[tuple[int, int], list[int]]":
+    """Pure-Python replay of the kernel's DMA issue schedule.
 
-    def start_chunk(tile, c: int):
-        """Issue async DMA of chunk c of weight tile `tile` into its slot."""
-        lo, hi = _chunk_bounds(K, C, c)
-        slot = jax.lax.rem(tile, G)
-        copy = pltpu.make_async_copy(
-            w_hbm.at[pl.ds(lo, hi - lo), pl.ds(tile * bn, bn)],
+    Returns {(step, chunk): [issue_steps]} — the steps at which chunk `chunk`
+    of the weight tile consumed at `step` is DMA'd.  Mirrors `_gpp_kernel`'s
+    loops one-for-one; the schedule tests assert every (step, chunk) appears
+    exactly once, at or before its consuming step.
+    """
+    issued: dict[tuple[int, int], list[int]] = {}
+    for s in range(num_steps):
+        if G == 1:
+            issued.setdefault((s, 0), []).append(s)
+            continue
+        if s == 0:
+            for c in range(C):                       # step 0: all chunks now
+                issued.setdefault((0, c), []).append(0)
+            for d in range(1, C):                    # ramp: folded chunks
+                if d < num_steps:
+                    for c in range(0, C - d):
+                        issued.setdefault((d, c), []).append(0)
+        for d in range(1, G):                        # steady state
+            c = C - d
+            if c >= 0 and s + d < num_steps:
+                issued.setdefault((s + d, c), []).append(s)
+    return issued
+
+
+def _gpp_kernel(*refs, grid_mnk: tuple, num_bufs: int, bm: int, bn: int,
+                bk: int, C: int, has_scale: bool, has_bias: bool, activation,
+                out_dtype, w_dtype, x_dtype):
+    """Pallas kernel body; grid = (num_m, num_n, num_k), k innermost."""
+    x_ref = refs[0]
+    w_hbm = refs[1]
+    i = 2
+    scale_ref = bias_ref = None
+    if has_scale:
+        scale_ref = refs[i]; i += 1
+    if has_bias:
+        bias_ref = refs[i]; i += 1
+    y_ref = refs[i]
+    acc_ref, ring, sems = refs[i + 1], refs[i + 2], refs[i + 3]
+
+    m, n, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    num_m, nn, nk = grid_mnk
+    S = num_m * nn * nk                    # total sequential grid steps
+    T = nn * nk                            # weight tiles per m-pass
+    G = num_bufs
+    s = (m * nn + n) * nk + k              # global step
+
+    def start_chunk(step, c: int):
+        """Issue async DMA of chunk c of the weight tile for grid step `step`."""
+        t = jax.lax.rem(step, T)
+        n_idx, k_idx = t // nk, jax.lax.rem(t, nk)
+        slot = jax.lax.rem(step, G)
+        lo, hi = _chunk_bounds(bk, C, c)
+        pltpu.make_async_copy(
+            w_hbm.at[pl.ds(k_idx * bk + lo, hi - lo), pl.ds(n_idx * bn, bn)],
             ring.at[slot, pl.ds(lo, hi - lo), :],
             sems.at[slot],
-        )
-        copy.start()
+        ).start()
 
-    def wait_chunk(tile, c: int):
-        lo, hi = _chunk_bounds(K, C, c)
-        slot = jax.lax.rem(tile, G)
+    def wait_chunk(step, c: int):
+        t = jax.lax.rem(step, T)
+        n_idx, k_idx = t // nk, jax.lax.rem(t, nk)
+        slot = jax.lax.rem(step, G)
+        lo, hi = _chunk_bounds(bk, C, c)
         pltpu.make_async_copy(
-            w_hbm.at[pl.ds(lo, hi - lo), pl.ds(tile * bn, bn)],
+            w_hbm.at[pl.ds(k_idx * bk + lo, hi - lo), pl.ds(n_idx * bn, bn)],
             ring.at[slot, pl.ds(lo, hi - lo), :],
             sems.at[slot],
         ).wait()
 
     if G == 1:
         # in-situ: fetch-then-compute every step, nothing in flight.
-        start_chunk(j, 0)
-        wait_chunk(j, 0)
+        start_chunk(s, 0)
+        wait_chunk(s, 0)
     else:
-        # Chunk schedule: tile t's chunk c is issued at step t-C+c; steps < 0
-        # fold into the step-0 pipeline-fill prologue.  Coverage proof in
-        # tests/test_kernels.py::test_chunk_schedule_covers_every_chunk_once.
-        @pl.when(j == 0)
+        # Chunk schedule: step s's chunk c is issued at step s-C+c; steps < 0
+        # fold into the step-0 pipeline-fill prologue.  Mirrored by
+        # `chunk_issue_schedule` above — keep the two in lockstep.
+        @pl.when(s == 0)
         def _prologue():
-            # tile 0 computes immediately: all C chunks now.
-            for c in range(C):
+            for c in range(C):                   # step 0 computes immediately
                 start_chunk(0, c)
-            # tiles 1..G-2: chunks 0..C-1-k had negative scheduled steps.
-            for k in range(1, G - 1):
-                if k >= 1:  # tile index is static here
-                    for c in range(0, C - k):
-                        @pl.when(k < nt)
-                        def _(k=k, c=c):
-                            start_chunk(k, c)
+            for d in range(1, C):                # steps 1..C-1: folded chunks
+                if d < S:                        # S is static
+                    for c in range(0, C - d):
+                        start_chunk(d, c)
 
-        # steady state: at step j issue chunk C-k of tile j+k, k = 1..G-1.
-        for k in range(1, G):
-            c = C - k
+        # steady state: at step s issue chunk C-d of step s+d, d = 1..G-1.
+        for d in range(1, G):
+            c = C - d
             if c < 0:
                 continue
 
-            @pl.when(j + k < nt)
-            def _(k=k, c=c):
-                start_chunk(j + k, c)
+            @pl.when(s + d < S)
+            def _(d=d, c=c):
+                start_chunk(s + d, c)
 
-    # wait for all chunks of tile j, then compute.
+    # wait for all chunks of step s's tile, then compute this K-slice.
     if G >= 2:
         for c in range(C):
-            wait_chunk(j, c)
-    slot = jax.lax.rem(j, G)
+            wait_chunk(s, c)
+    slot = jax.lax.rem(s, G)
     w_tile = ring[slot]
-    acc = jax.lax.dot_general(
-        x_ref[...], w_tile,
+    x_tile = x_ref[...]
+    if w_dtype != x_dtype or w_dtype == jnp.int8:
+        # dtype-aware streaming: the tile was DMA'd raw (bf16/int8 bytes);
+        # widen to f32 right before the MXU, accumulate in f32.
+        w_tile = w_tile.astype(jnp.float32)
+        x_tile = x_tile.astype(jnp.float32)
+    contrib = jax.lax.dot_general(
+        x_tile, w_tile,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    y_ref[...] = acc.astype(out_dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(k != 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + contrib
+
+    # fused epilogue on the last K step, before the output store.
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if has_scale:
+            out = out * scale_ref[...]           # (1, bn) dequant broadcast
+        if has_bias:
+            out = out + bias_ref[...]
+        out = _ACTIVATIONS[activation](out)
+        y_ref[...] = out.astype(out_dtype)
+
+
+def _pad2(a: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    if a.shape == (rows, cols):
+        return a
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
 
 
 def gpp_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
-    block_n: int = 256,
-    num_bufs: int = 4,
+    bias: jnp.ndarray | None = None,
+    w_scale: jnp.ndarray | None = None,
+    activation: str | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    num_bufs: int | None = None,
+    vmem_budget: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Streaming matmul with the generalized ping-pong DMA schedule.
 
     Args:
-      x: (M, K) activations (VMEM-resident; M is the paper's n_in).
-      w: (K, N) weights in HBM, streamed in (K, block_n) column tiles.
-      block_n: weight tile width; multiple of 128 (MXU lane alignment).
+      x: (M, K) activations (streamed through VMEM in (block_m, block_k)
+         tiles; block_m is the paper's n_in).
+      w: (K, N) weights in HBM, streamed in (block_k, block_n) tiles.  May be
+         a narrower dtype than x (bf16/int8): tiles are DMA'd raw and widened
+         in-kernel against f32 accumulation.
+      bias: optional (N,) bias fused into the last-K-step epilogue.
+      w_scale: optional per-column dequant scale — scalar or (N,) — applied
+         to the f32 accumulator in the epilogue (int8 streaming).
+      activation: optional fused activation: relu | gelu | silu | tanh.
+      block_m/block_n/block_k: tile sizes; any left None is planned against
+         the VMEM budget (`core.schedule.plan_matmul_tiles`).  Ragged edges
+         are zero-padded, not errors.
       num_bufs: ring depth G — 1: in-situ, 2: naive ping-pong, >=3: GPP.
+         None: planned from the DMA:compute ratio of one tile.
+      vmem_budget: on-chip working-set budget in bytes (default ~100 MiB).
       interpret: run the kernel body in interpret mode (CPU validation).
     """
     M, K = x.shape
     K2, N = w.shape
     if K != K2:
         raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
-    if N % block_n != 0:
-        raise ValueError(f"N={N} must be divisible by block_n={block_n}")
-    if num_bufs < 1:
+    if num_bufs is not None and num_bufs < 1:
         raise ValueError("num_bufs >= 1")
-    num_tiles = N // block_n
-    G = min(num_bufs, max(1, num_tiles))
-    C = max(1, G - 1)
-    if K < C:
-        raise ValueError(f"K={K} too small to split into {C} chunks")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    out_dtype = x.dtype
 
-    # VMEM budget sanity (target TPU v5e ~128 MiB/core): ring + x + y block.
-    vmem_bytes = (G * K * block_n + M * K + M * block_n) * x.dtype.itemsize
-    if vmem_bytes > 100 * 1024 * 1024:
-        raise ValueError(
-            f"working set {vmem_bytes/2**20:.1f} MiB exceeds VMEM budget; "
-            f"reduce block_n or num_bufs"
-        )
+    plan_kw = dict(vmem_budget=vmem_budget) if vmem_budget is not None else {}
+    plan = plan_matmul_tiles(
+        M, K, N,
+        x_itemsize=x.dtype.itemsize,
+        w_itemsize=w.dtype.itemsize,
+        out_itemsize=jnp.dtype(out_dtype).itemsize,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        num_bufs=num_bufs, **plan_kw,
+    )
+    bm, bn, bk = plan.block_m, plan.block_n, plan.block_k
+    num_m, num_n, num_k = plan.grid(M, N, K)
+    G = min(plan.num_bufs, max(1, num_m * num_n * num_k))
+    # chunks per tile: C = G-1 splits of the block_k sublanes (clamped so
+    # every chunk is non-empty even for tiny K tiles).
+    C = max(1, min(G - 1, bk))
+
+    # zero-pad ragged edges to full tiles (K-padding is correctness-neutral;
+    # M/N padding is sliced off the output).
+    Mp, Kp, Np = num_m * bm, num_k * bk, num_n * bn
+    xp = _pad2(x, Mp, Kp)
+    wp = _pad2(w, Kp, Np)
+
+    operands = [xp, wp]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),      # x tile
+        pl.BlockSpec(memory_space=pl.ANY),                   # w: stays in HBM
+    ]
+    has_scale = w_scale is not None
+    has_bias = bias is not None
+    if has_scale:
+        sc = jnp.broadcast_to(
+            jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, N))
+        operands.append(_pad2(sc, 1, Np))
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
+    if has_bias:
+        b = jnp.asarray(bias, jnp.float32).reshape(1, N)
+        operands.append(_pad2(b, 1, Np))
+        in_specs.append(pl.BlockSpec((1, bn), lambda m, n, k: (0, n)))
 
     kernel = functools.partial(
-        _gpp_kernel, num_bufs=G, bn=block_n, K=K, out_dtype=x.dtype
+        _gpp_kernel, grid_mnk=(num_m, num_n, num_k), num_bufs=G,
+        bm=bm, bn=bn, bk=bk, C=C,
+        has_scale=has_scale, has_bias=has_bias, activation=activation,
+        out_dtype=out_dtype, w_dtype=w.dtype, x_dtype=x.dtype,
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         kernel,
-        grid=(num_tiles,),
-        in_specs=[
-            pl.BlockSpec((M, K), lambda j: (0, 0)),          # x: VMEM resident
-            pl.BlockSpec(memory_space=pl.ANY),               # w: stays in HBM
-        ],
-        out_specs=pl.BlockSpec((M, block_n), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        grid=(num_m, num_n, num_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[
-            pltpu.VMEM((G, K, block_n), x.dtype),            # weight ring
+            pltpu.VMEM((bm, bn), jnp.float32),               # f32 accumulator
+            pltpu.VMEM((G, bk, bn), w.dtype),                # weight ring
             pltpu.SemaphoreType.DMA((G,)),                   # per-slot DMA sems
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),              # sequential grid
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 3,          # sequential grid
         ),
         interpret=interpret,
-    )(x, w)
+    )(*operands)
+    if (Mp, Np) != (M, N):
+        y = y[:M, :N]
+    return y

@@ -2,10 +2,17 @@
 
 `streamed_matmul` picks the ring depth from the same GPP planner that the
 paper's analytic model validates (`repro.core.schedule.plan_stream`), using
-TPU v5e constants: a (K, bn) bf16 tile moves 2*K*bn bytes at ~819 GB/s HBM
-while the MXU computes 2*M*K*bn flops at ~197 TFLOP/s, so
-t_dma/t_compute = 197e12*2 / (819e9 * 2*M) ≈ 120/M — small M (the paper's
-small-n_in regime) is exactly where deep rings win.
+TPU v5e constants: a (block_k, bn) bf16 tile moves block_k*bn*2 bytes at
+~819 GB/s HBM while the MXU computes 2*M*block_k*bn flops at ~197 TFLOP/s,
+so t_dma/t_compute ≈ 120/M for bf16 — small M (the paper's small-n_in
+regime) is exactly where deep rings win.
+
+`dense` is the model-facing entry point: it flattens leading dims, routes the
+matmul either through the streaming Pallas kernel (TPU backend, weight large
+enough to be worth streaming) or through the fused-epilogue jnp reference
+(CPU / tiny weights), and restores the leading dims.  The "ref" mode
+reproduces plain `act(x @ w)` math bit-for-bit so existing model numerics
+are unchanged when the kernel is off.
 """
 from __future__ import annotations
 
@@ -14,11 +21,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import plan_stream
-from repro.kernels.gpp_matmul import gpp_matmul
+from repro.core.schedule import HBM_BYTES_PER_S, PEAK_FLOPS, plan_stream
+from repro.kernels.gpp_matmul import _ACTIVATIONS, gpp_matmul
+from repro.kernels.ref import dense_ref
 
-HBM_BYTES_PER_S = 819e9
-PEAK_FLOPS = 197e12
+# below this weight size the DMA pipeline cannot beat a resident matmul
+DENSE_KERNEL_MIN_BYTES = 1 * 1024 * 1024
+
+DENSE_MODES = ("auto", "ref", "kernel", "interpret")
 
 
 def plan_ring_depth(M: int, K: int, block_n: int, dtype=jnp.bfloat16, max_ring: int = 8) -> int:
@@ -34,19 +44,27 @@ def plan_ring_depth(M: int, K: int, block_n: int, dtype=jnp.bfloat16, max_ring: 
     return plan.ring_depth
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "num_bufs", "interpret"))
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "block_m", "block_n", "block_k", "num_bufs", "interpret"))
 def streamed_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
-    block_n: int = 256,
+    bias: jnp.ndarray | None = None,
+    w_scale: jnp.ndarray | None = None,
+    activation: str | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     num_bufs: int | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """y = x @ w with HBM-streamed weights under the GPP DMA schedule."""
-    if num_bufs is None:
-        num_bufs = plan_ring_depth(x.shape[0], x.shape[1], block_n, x.dtype)
-    return gpp_matmul(x, w, block_n=block_n, num_bufs=num_bufs, interpret=interpret)
+    """y = epilogue(x @ w) with HBM-streamed weights under the GPP DMA
+    schedule, tiled over M/N/K by the VMEM-budget planner."""
+    return gpp_matmul(
+        x, w, bias=bias, w_scale=w_scale, activation=activation,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        num_bufs=num_bufs, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "num_bufs", "interpret"))
@@ -69,3 +87,97 @@ def streamed_gemm_sequence(
     y = gpp_matmul(x, w_flat, block_n=block_n, num_bufs=num_bufs, interpret=interpret)
     M = x.shape[0]
     return jnp.transpose(y.reshape(M, R, N), (1, 0, 2))
+
+
+def _targets_tpu(*arrays) -> bool:
+    """Best-effort check that the computation will land on TPU: committed
+    concrete arrays reveal their devices (every inspectable array must be on
+    TPU); tracers (under jit) don't, so we fall back to the process default
+    backend.  Work explicitly pinned to CPU inside a jit on a TPU host can
+    still mis-route — pass mode="ref" there."""
+    saw_devices = False
+    for a in arrays:
+        devices = getattr(a, "devices", None)
+        if callable(devices):
+            try:
+                if not all(d.platform == "tpu" for d in devices()):
+                    return False
+                saw_devices = True
+            except Exception:
+                continue
+    return saw_devices or jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _dense_kernel(activation, interpret, x2, w, bias, w_scale):
+    """Kernel-path forward with a ref-math VJP: the Pallas kernel has no AD
+    rule, so backward recomputes through the fused-epilogue oracle
+    (`dense_ref`, same f32 math the kernel implements) — training under
+    mode="auto"/"kernel" gets standard XLA matmul gradients while the
+    forward keeps the streaming schedule."""
+    return gpp_matmul(x2, w, bias=bias, w_scale=w_scale,
+                      activation=activation, interpret=interpret)
+
+
+def _dense_kernel_fwd(activation, interpret, x2, w, bias, w_scale):
+    y = _dense_kernel(activation, interpret, x2, w, bias, w_scale)
+    return y, (x2, w, bias, w_scale)
+
+
+def _dense_kernel_bwd(activation, interpret, res, g):
+    x2, w, bias, w_scale = res
+    _, pullback = jax.vjp(
+        lambda xx, ww, bb, ss: dense_ref(xx, ww, bias=bb, w_scale=ss,
+                                         activation=activation),
+        x2, w, bias, w_scale)
+    return pullback(g)
+
+
+_dense_kernel.defvjp(_dense_kernel_fwd, _dense_kernel_bwd)
+
+
+def _dense_ref_path(x2: jnp.ndarray, w: jnp.ndarray, bias, activation):
+    """Exact pre-kernel model math: act(x @ w [+ bias]) in the ambient dtype
+    (no f32 round trip), so "ref" routing leaves existing models untouched."""
+    y = x2 @ w
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return _ACTIVATIONS[activation](y)
+
+
+def dense(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bias: jnp.ndarray | None = None,
+    w_scale: jnp.ndarray | None = None,
+    activation: str | None = None,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """act(x @ w [* w_scale] [+ bias]) over arbitrary leading dims of x.
+
+    mode:
+      auto       kernel on TPU when w is at least DENSE_KERNEL_MIN_BYTES
+                 (the streaming regime), else ref
+      kernel     always the Pallas GPP kernel (compiled)
+      interpret  the Pallas kernel in interpret mode (CPU validation)
+      ref        fused jnp fallback (identical math to the pre-kernel models)
+    """
+    if mode not in DENSE_MODES:
+        raise ValueError(f"dense mode must be one of {DENSE_MODES}, got {mode!r}")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "auto":
+        w_bytes = w.size * w.dtype.itemsize
+        mode = ("kernel" if _targets_tpu(x, w)
+                and w_bytes >= DENSE_KERNEL_MIN_BYTES else "ref")
+    if mode == "ref":
+        if w_scale is not None:
+            w = (w.astype(jnp.float32)
+                 * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)).astype(x.dtype)
+        y2 = _dense_ref_path(x2, w, bias, activation)
+    else:
+        y2 = _dense_kernel(activation, mode == "interpret", x2, w, bias, w_scale)
+    return y2.reshape(*lead, w.shape[-1])

@@ -9,6 +9,20 @@ def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return acc.astype(x.dtype)
 
 
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, *, bias=None, w_scale=None,
+              activation: str | None = None) -> jnp.ndarray:
+    """Oracle for gpp_matmul's fused epilogue: f32 accumulation, then
+    per-column dequant scale, bias, activation — all in f32 — cast to x.dtype."""
+    from repro.kernels.gpp_matmul import _ACTIVATIONS  # single source of truth
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if w_scale is not None:
+        acc = acc * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    if bias is not None:
+        acc = acc + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    return _ACTIVATIONS[activation](acc).astype(x.dtype)
+
+
 def streamed_gemm_seq_ref(x: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
     """Reference for a *sequence* of GeMMs with streamed weights (the paper's
     consecutive-GeMM BLAS workload): ys[r] = x @ ws[r] for each round r."""

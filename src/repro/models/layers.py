@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import dense
+
 Pytree = object
 
 
@@ -25,7 +27,9 @@ def sds(shape, dtype) -> jax.ShapeDtypeStruct:
 def init_from_specs(specs: Pytree, key: jax.Array, scale: float = 0.02) -> Pytree:
     """Materialize params from a spec tree: truncated-normal(0, scale) for
     >=2D weights, ones for '*scale*' (norm) leaves, zeros for biases."""
-    leaves, treedef = jax.tree.flatten_with_path(specs)
+    # jax.tree.flatten_with_path only exists on newer jax; the tree_util
+    # spelling works across the versions we support.
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(specs)
     keys = jax.random.split(key, max(1, len(leaves)))
     out = []
     for (path, spec), k in zip(leaves, keys):
@@ -87,12 +91,16 @@ def mlp_specs(d: int, f: int, dtype, act: str) -> Pytree:
     return {"w_up": sds((d, f), dtype), "w_down": sds((f, d), dtype)}
 
 
-def mlp(p: Pytree, x: jnp.ndarray, act: str) -> jnp.ndarray:
+def mlp(p: Pytree, x: jnp.ndarray, act: str, dense_mode: str = "ref") -> jnp.ndarray:
+    """MLP with every projection routed through `kernels.ops.dense`, so the
+    streaming GPP matmul (fused activation epilogue included) takes over on
+    TPU at large shapes; "ref" mode reproduces the plain-jnp math exactly."""
     if act == "swiglu":
-        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = (dense(x, p["w_gate"], activation="silu", mode=dense_mode)
+             * dense(x, p["w_up"], mode=dense_mode))
     else:
-        h = jax.nn.gelu(x @ p["w_up"])
-    return h @ p["w_down"]
+        h = dense(x, p["w_up"], activation="gelu", mode=dense_mode)
+    return dense(h, p["w_down"], mode=dense_mode)
 
 
 # ---------------------------------------------------------------------------

@@ -169,7 +169,7 @@ def apply_block(cfg: ModelConfig, kind: str, p: Pytree, x: jnp.ndarray,
         if base == "moe":
             h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
         else:
-            h = mlp(p["mlp"], h, cfg.act)
+            h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
         return x + h
     if base == "mamba":
         return x + ssm_mod.ssm_forward(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x))
@@ -177,12 +177,12 @@ def apply_block(cfg: ModelConfig, kind: str, p: Pytree, x: jnp.ndarray,
         fwd = xlstm_mod.mlstm_forward if base == "mlstm" else xlstm_mod.slstm_forward
         x = x + fwd(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x))
         if cfg.d_ff:
-            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act, dense_mode=cfg.dense_kernel)
         return x
     if base == "cross":
         h = attn.cross_attn_forward(p["attn"], ac, rmsnorm(p["ln1"], x), enc)
         x = x + h
-        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act, dense_mode=cfg.dense_kernel)
     raise ValueError(kind)
 
 
@@ -335,7 +335,7 @@ def _block_prefill(cfg, kind, p, x, positions, enc, max_len):
         if base == "moe":
             h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
         else:
-            h = mlp(p["mlp"], h, cfg.act)
+            h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
         return x + h, cache
     if base == "mamba":
         y, st = ssm_mod.ssm_prefill(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x))
@@ -345,7 +345,7 @@ def _block_prefill(cfg, kind, p, x, positions, enc, max_len):
         y, st = fn(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x))
         x = x + y
         if cfg.d_ff:
-            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act, dense_mode=cfg.dense_kernel)
         return x, st
     if base == "cross":
         return apply_block(cfg, kind, p, x, positions, enc), None
@@ -366,7 +366,7 @@ def _block_decode(cfg, kind, p, x, cache, pos, enc):
         if base == "moe":
             h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
         else:
-            h = mlp(p["mlp"], h, cfg.act)
+            h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
         return x + h, cache
     if base == "mamba":
         y, st = ssm_mod.ssm_decode(p["ssm"], _ssm_cfg(cfg), rmsnorm(p["ln"], x), cache)
@@ -376,13 +376,13 @@ def _block_decode(cfg, kind, p, x, cache, pos, enc):
         y, st = fn(p["mix"], _xlstm_cfg(cfg), rmsnorm(p["ln1"], x), cache)
         x = x + y
         if cfg.d_ff:
-            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act)
+            x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act, dense_mode=cfg.dense_kernel)
         return x, st
     if base == "cross":
         positions = None
         h = attn.cross_attn_forward(p["attn"], ac, rmsnorm(p["ln1"], x), enc)
         x = x + h
-        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act), None
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x), cfg.act, dense_mode=cfg.dense_kernel), None
     raise ValueError(kind)
 
 

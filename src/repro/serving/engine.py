@@ -33,6 +33,10 @@ class ServeConfig:
     max_len: int = 256             # cache capacity per lane
     temperature: float = 0.0       # 0 => greedy
     eos_token: int | None = None
+    dense_kernel: str | None = None  # override cfg.dense_kernel at serve time:
+                                     # "kernel" streams dense weights through
+                                     # the GPP Pallas matmul instead of the
+                                     # reference path at large shapes
 
 
 @dataclasses.dataclass
@@ -45,6 +49,8 @@ class _Lane:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig):
+        if serve.dense_kernel is not None:
+            cfg = cfg.with_(dense_kernel=serve.dense_kernel)
         self.cfg = cfg
         self.params = params
         self.serve = serve

@@ -1,13 +1,20 @@
-"""Pallas gpp_matmul vs pure-jnp oracle: shape/dtype sweeps + schedule props."""
+"""Pallas gpp_matmul (3-D tiled grid) vs pure-jnp oracle: shape/dtype sweeps,
+fused-epilogue parity, ragged edges, and chunk-schedule properties."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels.gpp_matmul import _chunk_bounds, gpp_matmul
-from repro.kernels.ops import plan_ring_depth, streamed_gemm_sequence, streamed_matmul
-from repro.kernels.ref import matmul_ref, streamed_gemm_seq_ref
+from _hypothesis_compat import given, settings, st
+
+from repro.core.schedule import plan_matmul_tiles
+from repro.kernels.gpp_matmul import (
+    _chunk_bounds, chunk_issue_schedule, gpp_matmul,
+)
+from repro.kernels.ops import (
+    dense, plan_ring_depth, streamed_gemm_sequence, streamed_matmul,
+)
+from repro.kernels.ref import dense_ref, matmul_ref, streamed_gemm_seq_ref
 
 jax.config.update("jax_enable_x64", False)
 
@@ -25,6 +32,14 @@ SHAPES = [
     (8, 384, 1024, 128),    # K not divisible by chunks (remainder path)
 ]
 
+# (M, K, N, block_m, block_n, block_k): every grid dim > 1, plus ragged edges
+TILED_SHAPES = [
+    (40, 300, 520, 16, 128, 128),   # ragged M, K and N
+    (64, 512, 512, 32, 128, 128),   # clean 2x4x4 grid
+    (16, 640, 384, 16, 128, 256),   # ragged K tile (640 = 2.5 * 256)
+    (24, 128, 300, 8, 256, 128),    # ragged N < block_n on last tile
+]
+
 
 class TestNumerics:
     @pytest.mark.parametrize("M,K,N,bn", SHAPES)
@@ -36,16 +51,57 @@ class TestNumerics:
         np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
                                    rtol=1e-5, atol=1e-4)
 
+    @pytest.mark.parametrize("M,K,N,bm,bn,bk", TILED_SHAPES)
+    @pytest.mark.parametrize("G", [1, 2, 4])
+    def test_3d_grid_matches_oracle(self, M, K, N, bm, bn, bk, G):
+        """Parity on the full 3-D (m, n, k) grid incl. ragged final tiles."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(M + K + N + G))
+        x, w = rand(k1, (M, K), jnp.float32), rand(k2, (K, N), jnp.float32)
+        y = gpp_matmul(x, w, block_m=bm, block_n=bn, block_k=bk,
+                       num_bufs=G, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                                   rtol=1e-5, atol=1e-4)
+
     @pytest.mark.parametrize("dtype,rtol,atol", [
         (jnp.bfloat16, 3e-2, 0.5), (jnp.float32, 1e-5, 1e-4),
     ])
-    def test_dtypes(self, dtype, rtol, atol):
+    @pytest.mark.parametrize("G", [1, 2, 4])
+    def test_dtype_streaming(self, dtype, rtol, atol, G):
+        """bf16/f32 weights DMA'd raw, accumulated in f32, across ring depths
+        and a ragged multi-tile K."""
         k1, k2 = jax.random.split(jax.random.PRNGKey(7))
-        x, w = rand(k1, (16, 256), dtype), rand(k2, (256, 512), dtype)
-        y = gpp_matmul(x, w, block_n=128, num_bufs=4, interpret=True)
+        x, w = rand(k1, (16, 320), dtype), rand(k2, (320, 512), dtype)
+        y = gpp_matmul(x, w, block_m=16, block_n=128, block_k=128,
+                       num_bufs=G, interpret=True)
         np.testing.assert_allclose(np.asarray(y, np.float32),
                                    np.asarray(matmul_ref(x, w), np.float32),
                                    rtol=rtol, atol=atol)
+
+    @pytest.mark.parametrize("G", [1, 2, 4])
+    def test_int8_weight_streaming(self, G):
+        """int8 weights stream raw through the ring and dequantize in-kernel
+        against the f32 accumulator via the per-column epilogue scale."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+        x = rand(k1, (16, 320), jnp.float32)
+        w = jax.random.randint(k2, (320, 520), -127, 127, jnp.int8)
+        scale = jnp.abs(rand(k2, (520,), jnp.float32)) * 0.02 + 1e-3
+        y = gpp_matmul(x, w, w_scale=scale, block_m=16, block_n=128,
+                       block_k=128, num_bufs=G, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y),
+            np.asarray(dense_ref(x, w, w_scale=scale)),
+            rtol=1e-5, atol=1e-3)
+
+    @pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+    def test_fused_epilogue_bias_activation(self, act):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(13), 3)
+        x, w = rand(k1, (24, 256), jnp.float32), rand(k2, (256, 384), jnp.float32)
+        b = rand(k3, (384,), jnp.float32)
+        y = gpp_matmul(x, w, bias=b, activation=act, block_m=8, block_n=128,
+                       block_k=128, num_bufs=3, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(dense_ref(x, w, bias=b, activation=act)),
+            rtol=1e-5, atol=1e-4)
 
     @given(st.integers(1, 6), st.integers(1, 8))
     @settings(max_examples=12, deadline=None)
@@ -66,43 +122,121 @@ class TestNumerics:
                                    np.asarray(streamed_gemm_seq_ref(x, ws)),
                                    rtol=1e-5, atol=1e-4)
 
-    def test_error_on_misaligned(self):
-        x = jnp.zeros((8, 128)); w = jnp.zeros((128, 300))
-        with pytest.raises(ValueError):
-            gpp_matmul(x, w, block_n=256, num_bufs=2, interpret=True)
+    def test_ragged_n_no_longer_errors(self):
+        """N % block_n != 0 pads the last ragged tile instead of raising."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        x, w = rand(k1, (8, 128), jnp.float32), rand(k2, (128, 300), jnp.float32)
+        y = gpp_matmul(x, w, block_n=256, num_bufs=2, interpret=True)
+        assert y.shape == (8, 300)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                                   rtol=1e-5, atol=1e-4)
 
-    def test_error_on_vmem_overflow(self):
-        x = jnp.zeros((8, 8192), jnp.float32)
-        w = jnp.zeros((8192, 16384), jnp.float32)
+    def test_tiny_k_no_longer_errors(self):
+        """K < chunks clamps the chunk count instead of raising."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+        x, w = rand(k1, (8, 2), jnp.float32), rand(k2, (2, 256), jnp.float32)
+        y = gpp_matmul(x, w, block_n=128, num_bufs=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_vmem_exceeding_shape_now_tiles(self):
+        """A shape whose naive working set busts the old ~100 MiB ceiling
+        (whole-K ring + whole-M activations resident) runs via M/K tiling."""
+        M, K, N = 256, 8192, 2048
+        # the old 1-D kernel's configuration: whole K and M resident
         with pytest.raises(ValueError, match="VMEM"):
-            gpp_matmul(x, w, block_n=8192, num_bufs=8, interpret=True)
+            plan_matmul_tiles(M, K, N, block_m=M, block_k=K, block_n=2048,
+                              num_bufs=4)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        x, w = rand(k1, (M, K), jnp.float32), rand(k2, (K, N), jnp.float32)
+        y = gpp_matmul(x, w, interpret=True)  # auto-planned tiles
+        np.testing.assert_allclose(np.asarray(y), np.asarray(matmul_ref(x, w)),
+                                   rtol=1e-5, atol=2e-3)
+
+    def test_dense_kernel_path_is_differentiable(self):
+        """Training goes through dense(mode=auto->kernel) on TPU: the kernel
+        path carries a custom_vjp (ref-math backward), so grads must exist
+        and match the ref route."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(19), 3)
+        x = rand(k1, (4, 128), jnp.float32)
+        w = rand(k2, (128, 256), jnp.float32) * 0.05
+        b = rand(k3, (256,), jnp.float32) * 0.1
+
+        def loss(mode):
+            def f(x, w, b):
+                y = dense(x, w, bias=b, activation="silu", mode=mode)
+                return jnp.sum(y * y)
+            return f
+
+        gk = jax.grad(loss("interpret"), argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(loss("ref"), argnums=(0, 1, 2))(x, w, b)
+        for a, r in zip(gk, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_dense_routes_and_matches(self):
+        """dense() ref/interpret routes agree on leading-dim inputs."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(17), 3)
+        x = rand(k1, (2, 6, 256), jnp.float32)
+        w = rand(k2, (256, 384), jnp.float32)
+        b = rand(k3, (384,), jnp.float32)
+        y_ref = dense(x, w, bias=b, activation="silu", mode="ref")
+        y_krn = dense(x, w, bias=b, activation="silu", mode="interpret")
+        assert y_ref.shape == y_krn.shape == (2, 6, 384)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_krn),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestPlanner:
+    def test_respects_budget(self):
+        from repro.core.schedule import matmul_vmem_bytes
+        plan = plan_matmul_tiles(4096, 16384, 32768, x_itemsize=2,
+                                 w_itemsize=2, out_itemsize=2)
+        assert plan.vmem_bytes <= 100 * 1024 * 1024
+        assert plan.vmem_bytes == matmul_vmem_bytes(
+            plan.block_m, plan.block_n, plan.block_k, plan.num_bufs,
+            x_itemsize=2, w_itemsize=2, out_itemsize=2)
+
+    def test_pinned_dims_honored(self):
+        plan = plan_matmul_tiles(512, 4096, 4096, block_n=512, num_bufs=3)
+        assert plan.block_n == 512 and plan.num_bufs == 3
+
+    def test_small_shapes_single_tile(self):
+        plan = plan_matmul_tiles(8, 256, 256)
+        assert plan.block_m >= 8 and plan.block_k >= 256 and plan.block_n >= 256
+        assert plan.grid(8, 256, 256) == (1, 1, 1)
+
+    def test_pinned_overflow_raises(self):
+        with pytest.raises(ValueError, match="VMEM"):
+            plan_matmul_tiles(8192, 8192, 8192, block_m=8192, block_k=8192,
+                              block_n=8192, num_bufs=2)
+
+    def test_planner_regimes(self):
+        """Paper's insight in kernel form: DMA-bound (small n_in=M) needs a
+        deep ring; compute-bound (large M) degenerates to double buffering."""
+        assert plan_ring_depth(8, 256, 256) >= 4
+        assert plan_ring_depth(1024, 256, 256) == 2
 
 
 class TestSchedule:
     def test_chunk_schedule_covers_every_chunk_once(self):
-        """Replay the kernel's issue schedule symbolically: every (tile, chunk)
-        must be issued exactly once, and before the tile's compute step."""
-        for G in (2, 3, 4, 6):
-            C = G - 1
-            for nt in (1, 2, G - 1, G, G + 3, 4 * G):
-                issued = {}
-                for j in range(nt):
-                    if j == 0:
-                        for c in range(C):
-                            issued.setdefault((0, c), []).append(j)
-                        for k in range(1, G - 1):
-                            if k < nt:
-                                for c in range(0, C - k):
-                                    issued.setdefault((k, c), []).append(j)
-                    for k in range(1, G):
-                        c = C - k
-                        if c >= 0 and j + k < nt:
-                            issued.setdefault((j + k, c), []).append(j)
-                for t in range(nt):
+        """Replay the kernel's issue schedule symbolically on the flattened
+        3-D grid: every (step, chunk) must be DMA'd exactly once, at or
+        before the step that computes on it — including across n/k/m
+        tile-loop boundaries and short (sub-ramp) grids."""
+        for G in (1, 2, 3, 4, 6):
+            C = max(1, G - 1)
+            for grid in [(1, 1, 1), (1, 2, 3), (2, 3, 2), (1, G, 1),
+                         (3, 1, 1), (2, 2, G + 2)]:
+                S = grid[0] * grid[1] * grid[2]
+                issued = chunk_issue_schedule(S, G, C)
+                for s in range(S):
                     for c in range(C):
-                        steps = issued.get((t, c), [])
-                        assert len(steps) == 1, (G, nt, t, c, steps)
-                        assert steps[0] <= t, "chunk must arrive before compute"
+                        steps = issued.get((s, c), [])
+                        assert len(steps) == 1, (G, grid, s, c, steps)
+                        assert steps[0] <= s, "chunk must arrive before compute"
+                extra = set(issued) - {(s, c) for s in range(S) for c in range(C)}
+                assert not extra, (G, grid, extra)
 
     def test_chunk_bounds_partition(self):
         for K in (128, 384, 1000):
@@ -114,35 +248,22 @@ class TestSchedule:
                 for (a, b), (c, d) in zip(spans, spans[1:]):
                     assert b == c
 
-    def test_planner_regimes(self):
-        """Paper's insight in kernel form: DMA-bound (small n_in=M) needs a
-        deep ring; compute-bound (large M) degenerates to double buffering."""
-        assert plan_ring_depth(8, 256, 256) >= 4
-        assert plan_ring_depth(1024, 256, 256) == 2
-
     def test_flat_bandwidth_bytes_per_step(self):
-        """Steady-state issued bytes per grid step == exactly one tile."""
-        G, nt, K, bn = 4, 12, 384, 128
+        """Steady-state issued bytes per grid step == exactly one tile, even
+        across the n->n+1 and m->m+1 tile-loop boundaries."""
+        G, bk, bn = 4, 384, 128
         C = G - 1
-        per_step = [0] * nt
-        for j in range(nt):
-            if j == 0:
-                for c in range(C):
-                    lo, hi = _chunk_bounds(K, C, c)
-                    per_step[j] += (hi - lo) * bn
-                for k in range(1, G - 1):
-                    for c in range(0, C - k):
-                        lo, hi = _chunk_bounds(K, C, c)
-                        per_step[j] += (hi - lo) * bn
-            for k in range(1, G):
-                c = C - k
-                if c >= 0 and j + k < nt:
-                    lo, hi = _chunk_bounds(K, C, c)
-                    per_step[j] += (hi - lo) * bn
-        tile = K * bn
+        grid = (2, 3, 2)                     # (num_m, num_n, num_k)
+        S = grid[0] * grid[1] * grid[2]
+        issued = chunk_issue_schedule(S, G, C)
+        per_step = [0] * S
+        for (step, c), at in issued.items():
+            lo, hi = _chunk_bounds(bk, C, c)
+            per_step[at[0]] += (hi - lo) * bn
+        tile = bk * bn
         # steady-state steps (past ramp, before drain) move exactly one tile
-        for j in range(1, nt - G + 1):
+        for j in range(1, S - C):
             assert per_step[j] == tile, (j, per_step[j], tile)
-        # naive double-buffering reference: same average, but the ramp step
-        # must burst (G-1 tiles worth at step 0 here)
+        # the ramp step must burst (pipeline fill), the drain steps taper
         assert per_step[0] > tile
+        assert sum(per_step) == S * tile

@@ -46,6 +46,21 @@ class TestServingEngine:
         results = eng.run()
         assert results[r1] == results[r2]
 
+    def test_dense_kernel_override_threads_through(self, engine_setup):
+        """ServeConfig.dense_kernel overrides cfg routing for streamed dense
+        layers at serve time, and the explicit-"ref" engine decodes the same
+        tokens as the default ("auto" resolves to ref on CPU)."""
+        cfg, params = engine_setup
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(slots=1, max_len=64, dense_kernel="ref"))
+        assert eng.cfg.dense_kernel == "ref"
+        base = ServingEngine(cfg, params, ServeConfig(slots=1, max_len=64))
+        assert base.cfg.dense_kernel == cfg.dense_kernel
+        prompt = [5, 6, 7]
+        r1 = eng.submit(prompt, max_new_tokens=4)
+        r2 = base.submit(prompt, max_new_tokens=4)
+        assert eng.run()[r1] == base.run()[r2]
+
     def test_matches_manual_decode(self, engine_setup):
         """Engine output == hand-rolled prefill+decode loop."""
         import jax.numpy as jnp
