@@ -10,9 +10,16 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import time
 
 RESULTS: "dict[str, dict]" = {}
+
+# anchored to the repo root (not the CWD) so the tracked perf record and
+# TimingCache.from_bench_json consumers always see the same file
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json")
 
 
 def _timed(fn):
@@ -21,8 +28,11 @@ def _timed(fn):
     return (time.perf_counter() - t0) * 1e6, out
 
 
-def _record(name: str, us: float, derived: str) -> None:
-    RESULTS[name] = {"us_per_call": round(us, 1), "derived": derived}
+def _record(name: str, us: float, derived: str, extra: dict | None = None) -> None:
+    entry = {"us_per_call": round(us, 1), "derived": derived}
+    if extra:
+        entry.update(extra)
+    RESULTS[name] = entry
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -264,6 +274,129 @@ def bench_kernel_tiled_vmem():
         f"_maxerr={err:.1e}")
 
 
+def bench_dense_attn_projection():
+    """Unified dense() routing for attention projections: interpret-mode
+    parity of a dhk-shaped q-proj and an hkd-shaped o-proj against the
+    einsum path, plus jit'd ref-path latency at a serving-ish shape."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.ops import dense
+
+    def run():
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (8, 256), jnp.float32)
+        wq = jax.random.normal(key, (256, 8, 64), jnp.float32)
+        q = dense(x, wq, mode="interpret")
+        np.testing.assert_allclose(
+            np.asarray(q), np.asarray(jnp.einsum("bd,dhk->bhk", x, wq)),
+            rtol=1e-5, atol=1e-4)
+        wo = jax.random.normal(key, (8, 64, 256), jnp.float32)
+        o = dense(q, wo, mode="interpret", contract_dims=2)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(jnp.einsum("bhk,hkd->bd", q, wo)),
+            rtol=1e-5, atol=1e-4)
+        # latency: jit'd ref path at a 2048-wide projection
+        xb = jax.random.normal(key, (64, 2048), jnp.bfloat16)
+        wb = jax.random.normal(key, (2048, 16, 128), jnp.bfloat16)
+        f = jax.jit(lambda x, w: dense(x, w, mode="ref"))
+        f(xb, wb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            f(xb, wb).block_until_ready()
+        return (time.perf_counter() - t0) / 10 * 1e6
+
+    us, ref_us = _timed(run)
+    _record("dense_attn_projection", us,
+            f"qproj/oproj_interpret_allclose_refpath={ref_us:.0f}us@64x2048x2048")
+
+
+def bench_dense_grouped_moe():
+    """Grouped-expert streaming matmul: interpret parity vs the batched
+    einsum oracle at a ragged capacity, plus jit'd ref latency."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.ops import dense_grouped
+    from repro.kernels.ref import dense_grouped_ref
+
+    def run():
+        key = jax.random.PRNGKey(0)
+        E, C, D, F = 4, 13, 64, 96   # ragged C: capacity != tile multiple
+        x = jax.random.normal(key, (E, C, D), jnp.float32)
+        w = jax.random.normal(key, (E, D, F), jnp.float32)
+        y = dense_grouped(x, w, activation="silu", mode="interpret")
+        np.testing.assert_allclose(
+            np.asarray(y),
+            np.asarray(dense_grouped_ref(x, w, activation="silu")),
+            rtol=1e-5, atol=1e-4)
+        # latency: jit'd ref path at a small-expert-stack shape
+        xb = jax.random.normal(key, (8, 128, 512), jnp.bfloat16)
+        wb = jax.random.normal(key, (8, 512, 1024), jnp.bfloat16)
+        f = jax.jit(lambda x, w: dense_grouped(x, w, mode="ref"))
+        f(xb, wb).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            f(xb, wb).block_until_ready()
+        return (time.perf_counter() - t0) / 10 * 1e6
+
+    us, ref_us = _timed(run)
+    _record("dense_grouped_moe", us,
+            f"E4xC13_ragged_interpret_allclose_refpath={ref_us:.0f}us@8x128x512x1024")
+
+
+def bench_dense_timing_samples():
+    """Measure per-tile t_dma/t_compute on THIS host and mirror the samples
+    into BENCH_kernels.json for `core.schedule.TimingCache.from_bench_json`
+    — the measured-feedback loop that replaces the planner's analytic
+    PEAK_FLOPS/HBM_BYTES_PER_S constants with reality."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.schedule import TimingCache, plan_matmul_tiles
+
+    # tile large enough (8 MiB weights) that the transfer/compute dwarfs
+    # per-call dispatch overhead; a no-op baseline is subtracted anyway.
+    bm, bk, bn = 256, 4096, 512
+    tile_bytes = bk * bn * 4
+    tile_flops = 2.0 * bm * bk * bn
+    REPS = 8
+
+    def run():
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (bm, bk), jnp.float32)
+        w = jax.random.normal(key, (bk, bn), jnp.float32)
+        z = jnp.zeros(())
+        mm = jax.jit(lambda a, b: a @ b)
+        cp = jax.jit(lambda a: a + 0.0)   # device-memory round trip ~ "DMA"
+        noop = jax.jit(lambda a: a)       # dispatch-overhead baseline
+
+        def batch_time(fn, *args):
+            fn(*args).block_until_ready()             # warm/compile
+            t0 = time.perf_counter()
+            for _ in range(REPS):
+                fn(*args).block_until_ready()
+            return (time.perf_counter() - t0) / REPS
+
+        tc = TimingCache()
+        for _ in range(5):
+            base = batch_time(noop, z)
+            t_cmp = max(batch_time(mm, x, w) - base, 1e-9)
+            t_dma = max(batch_time(cp, w) - base, 1e-9)
+            tc.record(block_bytes=tile_bytes, compute_flops=tile_flops,
+                      t_dma=t_dma, t_compute=t_cmp)
+        analytic = plan_matmul_tiles(8, 4096, 8192)
+        measured = plan_matmul_tiles(8, 4096, 8192, timing=tc)
+        fps, bps = tc.effective_rates()
+        return tc, analytic, measured, fps, bps
+
+    us, (tc, analytic, measured, fps, bps) = _timed(run)
+    _record(
+        "dense_timing_samples", us,
+        f"measured_flops={fps:.2e}_bytes={bps:.2e}"
+        f"_ring_analytic={analytic.num_bufs}_measured={measured.num_bufs}",
+        extra={"samples": tc.to_json()})
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     try:
@@ -275,13 +408,16 @@ def main() -> None:
         bench_kernel_gpp_matmul()
         bench_kernel_cycle_model()
         bench_kernel_tiled_vmem()
+        bench_dense_attn_projection()
+        bench_dense_grouped_moe()
+        bench_dense_timing_samples()
         bench_streamer_modes()
     finally:
         # keep the partial perf record even if one benchmark dies mid-run
-        with open("BENCH_kernels.json", "w") as f:
+        with open(BENCH_JSON, "w") as f:
             json.dump(RESULTS, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"wrote BENCH_kernels.json ({len(RESULTS)} entries)")
+        print(f"wrote {BENCH_JSON} ({len(RESULTS)} entries)")
 
 
 if __name__ == "__main__":

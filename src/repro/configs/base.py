@@ -56,7 +56,10 @@ class ModelConfig:
     dtype: str = "bfloat16"
     subquadratic: bool = False       # eligible for long_500k decode
     stream: StreamSettings = StreamSettings()
-    dense_kernel: str = "auto"       # dense-matmul routing (kernels.ops.dense):
+    dense_kernel: str = "auto"       # matmul routing (kernels.ops.dense /
+                                     # dense_grouped) for EVERY projection —
+                                     # MLP, attention q/k/v/o, MLA up/down,
+                                     # MoE router+experts, SSM/xLSTM in/out:
                                      # auto | ref | kernel | interpret — auto
                                      # streams big weights through the GPP
                                      # Pallas kernel on TPU, jnp elsewhere

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import statistics
 from typing import Iterator
 
 from repro.core.analytical import PimConfig
@@ -249,6 +250,110 @@ def plan_stream(
 
 
 # ---------------------------------------------------------------------------
+# Measured-timing feedback: TimingCache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TimingSample:
+    """One measured (transfer, compute) pair for a weight tile.
+
+    block_bytes / compute_flops describe the tile the measurement was taken
+    on; t_dma / t_compute are the measured wall-times [s] to move and to
+    matmul that tile.  Rates (bytes/s, flop/s) are what the planner consumes,
+    so samples at any tile size inform plans at every tile size.
+    """
+
+    block_bytes: float
+    compute_flops: float
+    t_dma: float
+    t_compute: float
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self.block_bytes / self.t_dma if self.t_dma > 0 else math.inf
+
+    @property
+    def flops_per_s(self) -> float:
+        return self.compute_flops / self.t_compute if self.t_compute > 0 else math.inf
+
+
+class TimingCache:
+    """Measured per-tile t_dma/t_compute samples feeding `plan_matmul_tiles`.
+
+    The analytic model (PEAK_FLOPS / HBM_BYTES_PER_S) is a datasheet ideal;
+    real kernels see fused-epilogue overheads, DMA contention, and clock
+    throttling.  `benchmarks/run.py` records what one tile *actually* costs
+    on this host and the planner then sizes the ring against median measured
+    rates instead of the ideal — the paper's runtime-adaptation loop
+    (Fig 7) applied to the TPU mapping.
+    """
+
+    def __init__(self, samples: "list[TimingSample] | tuple[TimingSample, ...]" = ()):
+        self._samples: list[TimingSample] = list(samples)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    @property
+    def samples(self) -> "tuple[TimingSample, ...]":
+        return tuple(self._samples)
+
+    def record(self, *, block_bytes: float, compute_flops: float,
+               t_dma: float, t_compute: float) -> None:
+        if block_bytes <= 0 or compute_flops <= 0:
+            raise ValueError("block_bytes and compute_flops must be positive")
+        if t_dma < 0 or t_compute < 0:
+            raise ValueError("measured times must be non-negative")
+        self._samples.append(TimingSample(block_bytes, compute_flops,
+                                          t_dma, t_compute))
+
+    def effective_rates(self) -> "tuple[float, float]":
+        """(flops_per_s, transfer_bytes_per_s) — median of per-sample rates.
+
+        Median (not mean): one cold-cache or preempted sample must not drag
+        the plan; the planner wants the steady-state rate.
+        """
+        if not self._samples:
+            raise ValueError("TimingCache has no samples")
+        fps = statistics.median(s.flops_per_s for s in self._samples)
+        bps = statistics.median(s.bytes_per_s for s in self._samples)
+        return fps, bps
+
+    # ---- persistence (benchmarks/run.py emits, sessions consume) ----
+    def to_json(self) -> "list[dict]":
+        return [dataclasses.asdict(s) for s in self._samples]
+
+    @classmethod
+    def from_json(cls, entries: "list[dict]") -> "TimingCache":
+        return cls([TimingSample(**e) for e in entries])
+
+    @classmethod
+    def from_bench_json(cls, path: str,
+                        key: str = "dense_timing_samples") -> "TimingCache":
+        """Load the samples `benchmarks/run.py` mirrors into
+        BENCH_kernels.json (entry `key`, field "samples")."""
+        import json
+        with open(path) as f:
+            bench = json.load(f)
+        entry = bench.get(key) or {}
+        return cls.from_json(entry.get("samples", []))
+
+
+_DEFAULT_TIMING: "TimingCache | None" = None
+
+
+def set_default_timing_cache(cache: "TimingCache | None") -> None:
+    """Install measurements for every subsequent `plan_matmul_tiles` call
+    that doesn't pass its own `timing` (None clears)."""
+    global _DEFAULT_TIMING
+    _DEFAULT_TIMING = cache
+
+
+def get_default_timing_cache() -> "TimingCache | None":
+    return _DEFAULT_TIMING
+
+
+# ---------------------------------------------------------------------------
 # M/K/N tile planner for the streaming matmul kernel (kernels/gpp_matmul.py)
 # ---------------------------------------------------------------------------
 
@@ -316,8 +421,9 @@ def plan_matmul_tiles(
     num_bufs: int | None = None,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     max_ring: int = 8,
-    flops_per_s: float = PEAK_FLOPS,
-    transfer_bytes_per_s: float = HBM_BYTES_PER_S,
+    flops_per_s: "float | None" = None,
+    transfer_bytes_per_s: "float | None" = None,
+    timing: "TimingCache | None" = None,
 ) -> MatmulTilePlan:
     """Pick (block_m, block_n, block_k, num_bufs) under the VMEM budget.
 
@@ -326,7 +432,23 @@ def plan_matmul_tiles(
     until the working set fits, instead of erroring like the old 1-D kernel.
     Raises only if the *pinned* configuration cannot fit at minimum sizes of
     every free dim.
+
+    `timing` (or, when omitted, the cache installed via
+    `set_default_timing_cache`) replaces the analytic flops_per_s /
+    transfer_bytes_per_s constants (the None-defaults of the rate kwargs)
+    with median *measured* rates, so the ring depth tracks what one tile
+    actually costs on this host rather than the datasheet ideal.  An
+    explicitly passed rate kwarg wins over the ambient default cache (but
+    not over an explicitly passed `timing`).
     """
+    if timing is None and flops_per_s is None and transfer_bytes_per_s is None:
+        timing = _DEFAULT_TIMING
+    if timing is not None and len(timing):
+        flops_per_s, transfer_bytes_per_s = timing.effective_rates()
+    if flops_per_s is None:
+        flops_per_s = PEAK_FLOPS
+    if transfer_bytes_per_s is None:
+        transfer_bytes_per_s = HBM_BYTES_PER_S
     if M < 1 or K < 1 or N < 1:
         raise ValueError(f"bad matmul shape M={M} K={K} N={N}")
     if num_bufs is not None and num_bufs < 1:

@@ -64,6 +64,7 @@ _ACTIVATIONS = {
     "gelu": jax.nn.gelu,
     "silu": jax.nn.silu,
     "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
 }
 
 
@@ -102,6 +103,61 @@ def chunk_issue_schedule(num_steps: int, G: int,
     return issued
 
 
+def _make_chunk_ops(w_hbm, ring, sems, G: int, C: int, bk: int, tile_slice):
+    """(start_chunk, wait_chunk) pair for the ring's chunk DMAs, shared by
+    the flat and grouped kernels.  `tile_slice(step, lo, hi)` returns the
+    w_hbm sub-ref holding rows [lo, hi) of the weight tile consumed at
+    `step` — the step->tile mapping is the only per-grid difference."""
+    def _copy(step, c: int):
+        slot = jax.lax.rem(step, G)
+        lo, hi = _chunk_bounds(bk, C, c)
+        return pltpu.make_async_copy(
+            tile_slice(step, lo, hi),
+            ring.at[slot, pl.ds(lo, hi - lo), :],
+            sems.at[slot],
+        )
+
+    return (lambda step, c: _copy(step, c).start(),
+            lambda step, c: _copy(step, c).wait())
+
+
+def _run_chunk_schedule(s, S: int, G: int, C: int, start_chunk, wait_chunk):
+    """The GPP chunk-issue DMA schedule, shared by the flat and grouped
+    kernel bodies (their step->tile mappings live in start/wait_chunk).
+
+    G == 1 is in-situ (fetch-then-compute, nothing in flight).  Otherwise:
+    step s's chunk c is issued at step s-C+c; steps < 0 fold into the step-0
+    pipeline-fill prologue; at steady state, step s issues chunk C-d of step
+    s+d for d = 1..G-1, then waits for all chunks of its own tile.  Mirrored
+    by `chunk_issue_schedule` above — keep the two in lockstep.
+    """
+    if G == 1:
+        start_chunk(s, 0)
+        wait_chunk(s, 0)
+        return
+
+    @pl.when(s == 0)
+    def _prologue():
+        for c in range(C):                   # step 0 computes immediately
+            start_chunk(0, c)
+        for d in range(1, C):                # steps 1..C-1: folded chunks
+            if d < S:                        # S is static
+                for c in range(0, C - d):
+                    start_chunk(d, c)
+
+    for d in range(1, G):
+        c = C - d
+        if c < 0:
+            continue
+
+        @pl.when(s + d < S)
+        def _(d=d, c=c):
+            start_chunk(s + d, c)
+
+    for c in range(C):
+        wait_chunk(s, c)
+
+
 def _gpp_kernel(*refs, grid_mnk: tuple, num_bufs: int, bm: int, bn: int,
                 bk: int, C: int, has_scale: bool, has_bias: bool, activation,
                 out_dtype, w_dtype, x_dtype):
@@ -124,60 +180,16 @@ def _gpp_kernel(*refs, grid_mnk: tuple, num_bufs: int, bm: int, bn: int,
     G = num_bufs
     s = (m * nn + n) * nk + k              # global step
 
-    def start_chunk(step, c: int):
-        """Issue async DMA of chunk c of the weight tile for grid step `step`."""
+    def tile_slice(step, lo: int, hi: int):
+        """Rows [lo, hi) of the weight tile consumed at grid step `step`."""
         t = jax.lax.rem(step, T)
         n_idx, k_idx = t // nk, jax.lax.rem(t, nk)
-        slot = jax.lax.rem(step, G)
-        lo, hi = _chunk_bounds(bk, C, c)
-        pltpu.make_async_copy(
-            w_hbm.at[pl.ds(k_idx * bk + lo, hi - lo), pl.ds(n_idx * bn, bn)],
-            ring.at[slot, pl.ds(lo, hi - lo), :],
-            sems.at[slot],
-        ).start()
+        return w_hbm.at[pl.ds(k_idx * bk + lo, hi - lo), pl.ds(n_idx * bn, bn)]
 
-    def wait_chunk(step, c: int):
-        t = jax.lax.rem(step, T)
-        n_idx, k_idx = t // nk, jax.lax.rem(t, nk)
-        slot = jax.lax.rem(step, G)
-        lo, hi = _chunk_bounds(bk, C, c)
-        pltpu.make_async_copy(
-            w_hbm.at[pl.ds(k_idx * bk + lo, hi - lo), pl.ds(n_idx * bn, bn)],
-            ring.at[slot, pl.ds(lo, hi - lo), :],
-            sems.at[slot],
-        ).wait()
+    start_chunk, wait_chunk = _make_chunk_ops(w_hbm, ring, sems, G, C, bk,
+                                              tile_slice)
 
-    if G == 1:
-        # in-situ: fetch-then-compute every step, nothing in flight.
-        start_chunk(s, 0)
-        wait_chunk(s, 0)
-    else:
-        # Chunk schedule: step s's chunk c is issued at step s-C+c; steps < 0
-        # fold into the step-0 pipeline-fill prologue.  Mirrored by
-        # `chunk_issue_schedule` above — keep the two in lockstep.
-        @pl.when(s == 0)
-        def _prologue():
-            for c in range(C):                   # step 0 computes immediately
-                start_chunk(0, c)
-            for d in range(1, C):                # steps 1..C-1: folded chunks
-                if d < S:                        # S is static
-                    for c in range(0, C - d):
-                        start_chunk(d, c)
-
-        # steady state: at step s issue chunk C-d of step s+d, d = 1..G-1.
-        for d in range(1, G):
-            c = C - d
-            if c < 0:
-                continue
-
-            @pl.when(s + d < S)
-            def _(d=d, c=c):
-                start_chunk(s + d, c)
-
-    # wait for all chunks of step s's tile, then compute this K-slice.
-    if G >= 2:
-        for c in range(C):
-            wait_chunk(s, c)
+    _run_chunk_schedule(s, S, G, C, start_chunk, wait_chunk)
     slot = jax.lax.rem(s, G)
     w_tile = ring[slot]
     x_tile = x_ref[...]
@@ -325,4 +337,183 @@ def gpp_matmul(
     )(*operands)
     if (Mp, Np) != (M, N):
         y = y[:M, :N]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Grouped (batched-expert) variant: y[e] = epilogue(x[e] @ w[e])
+# ---------------------------------------------------------------------------
+
+def _gpp_grouped_kernel(*refs, grid_emnk: tuple, num_bufs: int, bm: int,
+                        bn: int, bk: int, C: int, has_bias: bool, activation,
+                        out_dtype, w_dtype, x_dtype):
+    """Pallas kernel body; grid = (E, num_m, num_n, num_k), k innermost.
+
+    The expert axis is the *outermost ring dimension*: the global step
+    sequence runs all of expert e's tiles, then expert e+1's, and the chunk
+    schedule is phrased over global steps — so while the MXU finishes expert
+    e's last tiles the ring is already streaming expert e+1's first weight
+    tiles from HBM.  Each expert's weights cross the HBM link exactly once
+    per (m-pass, n, k) visit, the PIM-DRAM batched-workload schedule
+    (arXiv 2105.03736) mapped onto the TPU ring.
+    """
+    x_ref = refs[0]
+    w_hbm = refs[1]
+    i = 2
+    bias_ref = None
+    if has_bias:
+        bias_ref = refs[i]; i += 1
+    y_ref = refs[i]
+    acc_ref, ring, sems = refs[i + 1], refs[i + 2], refs[i + 3]
+
+    e, m, n, k = (pl.program_id(d) for d in range(4))
+    E, num_m, nn, nk = grid_emnk
+    SM = num_m * nn * nk                   # sequential steps per expert
+    S = E * SM                             # total sequential grid steps
+    T = nn * nk                            # weight tiles per m-pass
+    G = num_bufs
+    s = ((e * num_m + m) * nn + n) * nk + k   # global step
+
+    def tile_coords(step):
+        """Weight-tile coords (expert, k-tile, n-tile) consumed at `step`."""
+        e_idx = step // SM
+        t = jax.lax.rem(jax.lax.rem(step, SM), T)
+        return e_idx, t // nk, jax.lax.rem(t, nk)
+
+    def tile_slice(step, lo: int, hi: int):
+        e_idx, n_idx, k_idx = tile_coords(step)
+        return w_hbm.at[e_idx, pl.ds(k_idx * bk + lo, hi - lo),
+                        pl.ds(n_idx * bn, bn)]
+
+    start_chunk, wait_chunk = _make_chunk_ops(w_hbm, ring, sems, G, C, bk,
+                                              tile_slice)
+
+    # same chunk schedule as `_gpp_kernel`, over E*SM global steps: the
+    # step->tile mapping is the only difference, so the flat one-tile-
+    # per-step DMA invariant holds across expert boundaries too.
+    _run_chunk_schedule(s, S, G, C, start_chunk, wait_chunk)
+    slot = jax.lax.rem(s, G)
+    w_tile = ring[slot]
+    x_tile = x_ref[0]
+    if w_dtype != x_dtype or w_dtype == jnp.int8:
+        w_tile = w_tile.astype(jnp.float32)
+        x_tile = x_tile.astype(jnp.float32)
+    contrib = jax.lax.dot_general(
+        x_tile, w_tile,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(k != 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + contrib
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out = acc_ref[...]
+        if has_bias:
+            out = out + bias_ref[...]
+        out = _ACTIVATIONS[activation](out)
+        y_ref[0] = out.astype(out_dtype)
+
+
+def _pad3(a: jnp.ndarray, d1: int, d2: int) -> jnp.ndarray:
+    if a.shape[1:] == (d1, d2):
+        return a
+    return jnp.pad(a, ((0, 0), (0, d1 - a.shape[1]), (0, d2 - a.shape[2])))
+
+
+def gpp_matmul_grouped(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bias: jnp.ndarray | None = None,
+    activation: str | None = None,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    num_bufs: int | None = None,
+    vmem_budget: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Batched-expert streaming matmul: y[e] = epilogue(x[e] @ w[e]).
+
+    Args:
+      x: (E, C, D) per-expert activation rows (MoE: C = expert capacity).
+      w: (E, D, F) per-expert weights in HBM, streamed tile-by-tile with the
+         expert axis as the outermost ring dimension (each expert's weights
+         cross the link once per step; the ring pipelines across experts).
+      bias: optional (E, F) per-expert bias fused into the epilogue.
+      activation: optional fused activation (see `_ACTIVATIONS`).
+      block_*/num_bufs/vmem_budget: as `gpp_matmul`, planned per expert.
+      interpret: run the kernel body in interpret mode (CPU validation).
+    """
+    E, M, K = x.shape
+    E2, K2, N = w.shape
+    if E != E2 or K != K2:
+        raise ValueError(f"grouped shape mismatch: {x.shape} @ {w.shape}")
+    if num_bufs is not None and num_bufs < 1:
+        raise ValueError("num_bufs >= 1")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    out_dtype = x.dtype
+
+    plan_kw = dict(vmem_budget=vmem_budget) if vmem_budget is not None else {}
+    plan = plan_matmul_tiles(
+        M, K, N,
+        x_itemsize=x.dtype.itemsize,
+        w_itemsize=w.dtype.itemsize,
+        out_itemsize=jnp.dtype(out_dtype).itemsize,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        num_bufs=num_bufs, **plan_kw,
+    )
+    bm, bn, bk = plan.block_m, plan.block_n, plan.block_k
+    num_m, num_n, num_k = plan.grid(M, N, K)
+    G = min(plan.num_bufs, max(1, E * num_m * num_n * num_k))
+    C = max(1, min(G - 1, bk))
+
+    Mp, Kp, Np = num_m * bm, num_k * bk, num_n * bn
+    xp = _pad3(x, Mp, Kp)
+    wp = _pad3(w, Kp, Np)
+
+    operands = [xp, wp]
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda e, m, n, k: (e, m, k)),  # x tile
+        pl.BlockSpec(memory_space=pl.ANY),                        # w: HBM
+    ]
+    has_bias = bias is not None
+    if has_bias:
+        b = jnp.asarray(bias, jnp.float32).reshape(E, N)
+        if N != Np:
+            b = jnp.pad(b, ((0, 0), (0, Np - N)))
+        operands.append(b)
+        in_specs.append(pl.BlockSpec((1, bn), lambda e, m, n, k: (e, n)))
+
+    kernel = functools.partial(
+        _gpp_grouped_kernel, grid_emnk=(E, num_m, num_n, num_k), num_bufs=G,
+        bm=bm, bn=bn, bk=bk, C=C, has_bias=has_bias, activation=activation,
+        out_dtype=out_dtype, w_dtype=w.dtype, x_dtype=x.dtype,
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid=(E, num_m, num_n, num_k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((E, Mp, Np), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),               # f32 accumulator
+            pltpu.VMEM((G, bk, bn), w.dtype),                # weight ring
+            pltpu.SemaphoreType.DMA((G,)),                   # per-slot sems
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",) * 4,          # sequential grid
+        ),
+        interpret=interpret,
+    )(*operands)
+    if (Mp, Np) != (M, N):
+        y = y[:, :M, :N]
     return y

@@ -7,27 +7,54 @@ TPU v5e constants: a (block_k, bn) bf16 tile moves block_k*bn*2 bytes at
 so t_dma/t_compute ≈ 120/M for bf16 — small M (the paper's small-n_in
 regime) is exactly where deep rings win.
 
-`dense` is the model-facing entry point: it flattens leading dims, routes the
-matmul either through the streaming Pallas kernel (TPU backend, weight large
-enough to be worth streaming) or through the fused-epilogue jnp reference
-(CPU / tiny weights), and restores the leading dims.  The "ref" mode
-reproduces plain `act(x @ w)` math bit-for-bit so existing model numerics
-are unchanged when the kernel is off.
+`dense` is the single model-facing matmul entry point for the whole model
+zoo.  Routing table (who calls it, with what weight layout):
+
+  models/layers.py   mlp w_up/w_gate/w_down        (D, F) 2-D weights
+  models/attention.py  gqa/mha q/k/v  (D, H, hd)   contract_dims=1
+                       o-proj         (H, hd, D)   contract_dims=2
+                       MLA w_dq/w_dkv (D, R)       2-D
+                           w_uq/w_uk/w_uv (R, H, hd)  contract_dims=1
+                           w_o        (H, hd, D)   contract_dims=2
+                       cross-attn q/k/v/o          as gqa
+  models/ssm.py        w_in/w_bc/w_dt/w_out        2-D
+  models/xlstm.py      mlstm q/k/v (D, H, hd), w_o (H, hd, D), gates,
+                       slstm z/i/f/og/out          2-D
+  models/moe.py        router/shared experts via `dense`; routed expert
+                       FFNs via `dense_grouped` (E, D, F) batched weights
+
+The einsum-shaped projection adapter: leading dims of x are flattened, the
+last `contract_dims` dims of x contract against the first `contract_dims`
+dims of w (reshaped to 2-D), and both are restored on the way out — so
+`dhk`/`hkd`-style projection tensors stream through the same GPP schedule
+as plain 2-D matmuls.  The matmul routes either through the streaming
+Pallas kernel (TPU backend, weight large enough to be worth streaming) or
+through the fused-epilogue jnp reference (CPU / tiny weights).  The "ref"
+mode reproduces plain `act(x @ w)` math bit-for-bit so existing model
+numerics are unchanged when the kernel is off.
+
+`dense_grouped` is the MoE batched-expert variant: (E, C, D) @ (E, D, F)
+with the expert axis as the outermost ring dimension of the streaming
+schedule, so each expert's weights cross the HBM link exactly once per
+step and the ring pipelines across experts.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.schedule import HBM_BYTES_PER_S, PEAK_FLOPS, plan_stream
-from repro.kernels.gpp_matmul import _ACTIVATIONS, gpp_matmul
-from repro.kernels.ref import dense_ref
+from repro.kernels.gpp_matmul import _ACTIVATIONS, gpp_matmul, gpp_matmul_grouped
+from repro.kernels.ref import dense_grouped_ref, dense_ref
 
 # below this weight size the DMA pipeline cannot beat a resident matmul
 DENSE_KERNEL_MIN_BYTES = 1 * 1024 * 1024
 
+# shared by `dense` and `dense_grouped` (the grouped path accepts the same
+# four modes; "kernel"/"interpret" route through gpp_matmul_grouped)
 DENSE_MODES = ("auto", "ref", "kernel", "interpret")
 
 
@@ -89,6 +116,20 @@ def streamed_gemm_sequence(
     return jnp.transpose(y.reshape(M, R, N), (1, 0, 2))
 
 
+def _ambient_mesh_active() -> bool:
+    """True when an ambient SPMD mesh is set: `pallas_call` cannot be
+    partitioned by GSPMD, so auto-mode must not route sharded global arrays
+    into the kernel — XLA would all-gather the full weight onto every device
+    (the exact traffic blowup the streaming path exists to avoid).  Callers
+    that hold per-rank local arrays (inside shard_map) can still opt in with
+    an explicit mode="kernel"."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        return mesh is not None and not mesh.empty
+    except Exception:  # noqa: BLE001 — older jax: no ambient-mesh API
+        return False
+
+
 def _targets_tpu(*arrays) -> bool:
     """Best-effort check that the computation will land on TPU: committed
     concrete arrays reveal their devices (every inspectable array must be on
@@ -106,6 +147,17 @@ def _targets_tpu(*arrays) -> bool:
             except Exception:
                 continue
     return saw_devices or jax.default_backend() == "tpu"
+
+
+def _resolve_auto_mode(x, w) -> str:
+    """The single auto-routing policy for `dense` and `dense_grouped`:
+    kernel on TPU when w is in the streaming regime AND no ambient SPMD
+    mesh would have to all-gather it into the (unpartitionable) pallas_call;
+    else the bit-identical ref path."""
+    w_bytes = w.size * w.dtype.itemsize
+    return ("kernel" if _targets_tpu(x, w)
+            and w_bytes >= DENSE_KERNEL_MIN_BYTES
+            and not _ambient_mesh_active() else "ref")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -153,8 +205,16 @@ def dense(
     w_scale: jnp.ndarray | None = None,
     activation: str | None = None,
     mode: str = "auto",
+    contract_dims: int = 1,
 ) -> jnp.ndarray:
     """act(x @ w [* w_scale] [+ bias]) over arbitrary leading dims of x.
+
+    The projection adapter generalizes the matmul to einsum-shaped weights:
+    the last `contract_dims` dims of x contract against the first
+    `contract_dims` dims of w, and w's remaining dims shape the output —
+    e.g. q-proj `bsd,dhk->bshk` is `dense(x, w_q)`, o-proj `bshk,hkd->bsd`
+    is `dense(out, w_o, contract_dims=2)`.  bias (if any) must match w's
+    output dims.
 
     mode:
       auto       kernel on TPU when w is at least DENSE_KERNEL_MIN_BYTES
@@ -167,17 +227,95 @@ def dense(
         raise ValueError(f"dense mode must be one of {DENSE_MODES}, got {mode!r}")
     if activation not in _ACTIVATIONS:
         raise ValueError(f"unknown activation {activation!r}")
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
+    if not 1 <= contract_dims <= min(x.ndim, w.ndim):
+        raise ValueError(
+            f"contract_dims={contract_dims} invalid for x{x.shape} @ w{w.shape}")
+    cshape = w.shape[:contract_dims]
+    if x.shape[-contract_dims:] != cshape:
+        raise ValueError(
+            f"contraction mismatch: x{x.shape} trailing dims vs w{w.shape} "
+            f"leading dims (contract_dims={contract_dims})")
+    out_dims = w.shape[contract_dims:]
+    Kf = math.prod(cshape)
+    Nf = math.prod(out_dims)
+    lead = x.shape[:x.ndim - contract_dims]
+    x2 = x.reshape(-1, Kf)
+    w2 = w.reshape(Kf, Nf)
+    if bias is not None:
+        bias = bias.reshape(Nf)
     if mode == "auto":
-        w_bytes = w.size * w.dtype.itemsize
-        mode = ("kernel" if _targets_tpu(x, w)
-                and w_bytes >= DENSE_KERNEL_MIN_BYTES else "ref")
+        mode = _resolve_auto_mode(x, w)
     if mode == "ref":
         if w_scale is not None:
-            w = (w.astype(jnp.float32)
-                 * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)).astype(x.dtype)
-        y2 = _dense_ref_path(x2, w, bias, activation)
+            w2 = (w2.astype(jnp.float32)
+                  * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)).astype(x.dtype)
+        y2 = _dense_ref_path(x2, w2, bias, activation)
     else:
-        y2 = _dense_kernel(activation, mode == "interpret", x2, w, bias, w_scale)
-    return y2.reshape(*lead, w.shape[-1])
+        y2 = _dense_kernel(activation, mode == "interpret", x2, w2, bias, w_scale)
+    return y2.reshape(*lead, *out_dims)
+
+
+# ---------------------------------------------------------------------------
+# grouped (batched-expert) entry point
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _dense_grouped_kernel(activation, interpret, x3, w, bias):
+    """Grouped kernel-path forward with a ref-math VJP (see `_dense_kernel`):
+    backward recomputes through `dense_grouped_ref`, the same f32 math the
+    grouped kernel implements."""
+    return gpp_matmul_grouped(x3, w, bias=bias, activation=activation,
+                              interpret=interpret)
+
+
+def _dense_grouped_kernel_fwd(activation, interpret, x3, w, bias):
+    y = _dense_grouped_kernel(activation, interpret, x3, w, bias)
+    return y, (x3, w, bias)
+
+
+def _dense_grouped_kernel_bwd(activation, interpret, res, g):
+    x3, w, bias = res
+    _, pullback = jax.vjp(
+        lambda xx, ww, bb: dense_grouped_ref(xx, ww, bias=bb,
+                                             activation=activation),
+        x3, w, bias)
+    return pullback(g)
+
+
+_dense_grouped_kernel.defvjp(_dense_grouped_kernel_fwd, _dense_grouped_kernel_bwd)
+
+
+def dense_grouped(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bias: jnp.ndarray | None = None,
+    activation: str | None = None,
+    mode: str = "auto",
+) -> jnp.ndarray:
+    """Per-expert act(x[e] @ w[e] [+ bias[e]]): (E, C, D) @ (E, D, F).
+
+    The MoE companion to `dense`: the streaming plan treats the expert axis
+    as the outermost ring dimension, so expert weights stream from HBM once
+    per step and the ring pipelines across experts (the paper's
+    consecutive-GeMM workload with per-round activations).  Modes as in
+    `dense`; "ref" reproduces the models' plain batched-einsum math
+    bit-for-bit.
+    """
+    if mode not in DENSE_MODES:
+        raise ValueError(f"dense mode must be one of {DENSE_MODES}, got {mode!r}")
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    if x.ndim != 3 or w.ndim != 3:
+        raise ValueError(f"dense_grouped wants (E,C,D) @ (E,D,F), "
+                         f"got x{x.shape} w{w.shape}")
+    if x.shape[0] != w.shape[0] or x.shape[2] != w.shape[1]:
+        raise ValueError(f"grouped shape mismatch: x{x.shape} @ w{w.shape}")
+    if mode == "auto":
+        mode = _resolve_auto_mode(x, w)
+    if mode == "ref":
+        y = jnp.einsum("ecd,edf->ecf", x, w)
+        if bias is not None:
+            y = y + bias[:, None, :].astype(y.dtype)
+        return _ACTIVATIONS[activation](y)
+    return _dense_grouped_kernel(activation, mode == "interpret", x, w, bias)

@@ -23,6 +23,19 @@ def dense_ref(x: jnp.ndarray, w: jnp.ndarray, *, bias=None, w_scale=None,
     return _ACTIVATIONS[activation](acc).astype(x.dtype)
 
 
+def dense_grouped_ref(x: jnp.ndarray, w: jnp.ndarray, *, bias=None,
+                      activation: str | None = None) -> jnp.ndarray:
+    """Oracle for gpp_matmul_grouped's fused epilogue: per-expert
+    y[e] = act(x[e] @ w[e] [+ bias[e]]), f32 accumulation, cast to x.dtype."""
+    from repro.kernels.gpp_matmul import _ACTIVATIONS  # single source of truth
+    acc = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                     w.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + jnp.asarray(bias, jnp.float32)[:, None, :]
+    return _ACTIVATIONS[activation](acc).astype(x.dtype)
+
+
 def streamed_gemm_seq_ref(x: jnp.ndarray, ws: jnp.ndarray) -> jnp.ndarray:
     """Reference for a *sequence* of GeMMs with streamed weights (the paper's
     consecutive-GeMM BLAS workload): ys[r] = x @ ws[r] for each round r."""

@@ -50,7 +50,30 @@ def main(argv=None):
     from repro.configs.base import ShapeConfig
     from repro.core.streamer import StreamSettings
     from repro.data.pipeline import DataConfig, TokenPipeline
-    from repro.dist.fault import StepWatchdog
+    try:
+        from repro.dist.fault import StepWatchdog
+    except ImportError:
+        # repro.dist was never built (planned fault-tolerance package).
+        # Inline fallback with the same contract: record(dt) -> True when a
+        # step straggles past 3x the median of recent steps (bounded window
+        # so the hot loop stays O(window) regardless of run length).
+        import collections
+        import statistics
+
+        class StepWatchdog:
+            def __init__(self, factor: float = 3.0, window: int = 256):
+                self.factor = factor
+                self._times = collections.deque(maxlen=window)
+
+            @property
+            def median(self) -> float:
+                return statistics.median(self._times) if self._times else 0.0
+
+            def record(self, dt: float) -> bool:
+                straggled = (len(self._times) >= 3
+                             and dt > self.factor * self.median)
+                self._times.append(dt)
+                return straggled
     from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.launch.steps import make_train_step
     from repro.models import registry

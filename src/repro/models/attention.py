@@ -17,6 +17,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import dense
 from repro.models.layers import sds, rope
 
 NEG_INF = -1e30
@@ -36,6 +37,10 @@ class AttnConfig:
     q_lora_rank: int | None = None
     rope_head_dim: int = 64
     dtype: object = jnp.bfloat16
+    # kernels.ops.dense routing for every projection (cfg.dense_kernel):
+    # "auto" streams big weights through the GPP Pallas kernel on TPU and
+    # falls back to the bit-identical jnp path elsewhere
+    dense_mode: str = "auto"
 
     @property
     def is_mla(self) -> bool:
@@ -288,13 +293,14 @@ def _attend(q, k, v, scale, *, window=None):
 # ---------------------------------------------------------------------------
 
 def gqa_project_qkv(p, c: AttnConfig, x, positions):
-    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
-    k = jnp.einsum("bsd,dgk->bsgk", x, p["w_k"])
-    v = jnp.einsum("bsd,dgk->bsgk", x, p["w_v"])
-    if c.qkv_bias:
-        q = q + p["b_q"].astype(q.dtype)
-        k = k + p["b_k"].astype(k.dtype)
-        v = v + p["b_v"].astype(v.dtype)
+    """q/k/v projections through `kernels.ops.dense` (bias fused into the
+    streaming epilogue); "ref" routing reproduces the einsum math exactly."""
+    bq = p["b_q"] if c.qkv_bias else None
+    bk = p["b_k"] if c.qkv_bias else None
+    bv = p["b_v"] if c.qkv_bias else None
+    q = dense(x, p["w_q"], bias=bq, mode=c.dense_mode)
+    k = dense(x, p["w_k"], bias=bk, mode=c.dense_mode)
+    v = dense(x, p["w_v"], bias=bv, mode=c.dense_mode)
     q = rope(q, positions, c.rope_theta)
     k = rope(k, positions, c.rope_theta)
     return q, k, v
@@ -305,7 +311,7 @@ def gqa_forward(p, c: AttnConfig, x, positions):
     B, S, _ = x.shape
     q, k, v = gqa_project_qkv(p, c, x, positions)
     out = _attend(q, k, v, 1.0 / math.sqrt(c.head_dim), window=c.window)
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2)
 
 
 def gqa_prefill(p, c: AttnConfig, x, positions, max_len: int):
@@ -325,7 +331,8 @@ def gqa_prefill(p, c: AttnConfig, x, positions, max_len: int):
     else:
         kc = jax.lax.dynamic_update_slice(kc, k[:, : min(S, span)], (0, 0, 0, 0))
         vc = jax.lax.dynamic_update_slice(vc, v[:, : min(S, span)], (0, 0, 0, 0))
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), {"k": kc, "v": vc}
+    return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
+            {"k": kc, "v": vc})
 
 
 def gqa_decode(p, c: AttnConfig, x, cache, pos):
@@ -348,7 +355,8 @@ def gqa_decode(p, c: AttnConfig, x, cache, pos):
     mask = valid[None, None, :]  # (1,1,span) -> broadcast (B,1,span)
     mask = jnp.broadcast_to(mask, (B, 1, span))
     out = _sdpa(q, kc, vc, mask, 1.0 / math.sqrt(c.head_dim))
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"]), {"k": kc, "v": vc}
+    return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
+            {"k": kc, "v": vc})
 
 
 # ---------------------------------------------------------------------------
@@ -359,10 +367,10 @@ def _mla_q(p, c: AttnConfig, x, positions):
     from repro.models.layers import rmsnorm
     nope = c.head_dim
     if c.q_lora_rank:
-        cq = rmsnorm({"scale": p["q_norm"]}, x @ p["w_dq"])
-        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+        cq = rmsnorm({"scale": p["q_norm"]}, dense(x, p["w_dq"], mode=c.dense_mode))
+        q = dense(cq, p["w_uq"], mode=c.dense_mode)
     else:
-        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+        q = dense(x, p["w_q"], mode=c.dense_mode)
     q_nope, q_rope = q[..., :nope], q[..., nope:]
     q_rope = rope(q_rope, positions, c.rope_theta)
     return jnp.concatenate([q_nope, q_rope], axis=-1)
@@ -370,7 +378,7 @@ def _mla_q(p, c: AttnConfig, x, positions):
 
 def _mla_latent(p, c: AttnConfig, x, positions):
     from repro.models.layers import rmsnorm
-    d = x @ p["w_dkv"]
+    d = dense(x, p["w_dkv"], mode=c.dense_mode)
     c_kv, k_rope = d[..., : c.kv_lora_rank], d[..., c.kv_lora_rank:]
     c_kv = rmsnorm({"scale": p["kv_norm"]}, c_kv)
     k_rope = rope(k_rope[..., None, :], positions, c.rope_theta)[..., 0, :]
@@ -379,15 +387,15 @@ def _mla_latent(p, c: AttnConfig, x, positions):
 
 def _mla_attend(p, c: AttnConfig, q, c_kv, k_rope, mask):
     nope = c.head_dim
-    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
-    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+    k_nope = dense(c_kv, p["w_uk"], mode=c.dense_mode)
+    v = dense(c_kv, p["w_uv"], mode=c.dense_mode)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (*k_nope.shape[:3], c.rope_head_dim))], axis=-1
     )
     out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(nope + c.rope_head_dim))
     out = out[..., :nope]  # v has nope dims; _sdpa padded? no: v dims = nope
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2)
 
 
 def mla_forward(p, c: AttnConfig, x, positions):
@@ -395,13 +403,13 @@ def mla_forward(p, c: AttnConfig, x, positions):
     q = _mla_q(p, c, x, positions)
     c_kv, k_rope = _mla_latent(p, c, x, positions)
     nope = c.head_dim
-    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"])
-    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"])
+    k_nope = dense(c_kv, p["w_uk"], mode=c.dense_mode)
+    v = dense(c_kv, p["w_uv"], mode=c.dense_mode)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (*k_nope.shape[:3], c.rope_head_dim))], axis=-1)
     out = _sdpa_chunked(q, k, v, 1.0 / math.sqrt(nope + c.rope_head_dim))
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2)
 
 
 def mla_prefill(p, c: AttnConfig, x, positions, max_len: int):
@@ -436,13 +444,13 @@ def cross_attn_forward(p, c: AttnConfig, x, enc):
     """x: (B, S, D) text; enc: (B, T, D) patch/frame embeddings (stubbed
     modality frontend).  No causal mask; no cache growth during decode."""
     from repro.models.layers import rmsnorm
-    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
-    k = jnp.einsum("btd,dgk->btgk", enc, p["w_k"])
-    v = jnp.einsum("btd,dgk->btgk", enc, p["w_v"])
+    q = dense(x, p["w_q"], mode=c.dense_mode)
+    k = dense(enc, p["w_k"], mode=c.dense_mode)
+    v = dense(enc, p["w_v"], mode=c.dense_mode)
     q = rmsnorm({"scale": p["q_norm"]}, q)
     k = rmsnorm({"scale": p["k_norm"]}, k)
     B, S = x.shape[:2]
     T = enc.shape[1]
     mask = jnp.ones((B, S, T), bool)
     out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(c.head_dim))
-    return jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2)

@@ -22,6 +22,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import dense, dense_grouped
 from repro.models.layers import sds
 
 
@@ -40,6 +41,8 @@ class MoeConfig:
     dispatch_groups: int = 16      # token groups (aligned to the data axis)
     ep_mode: str = "tp"            # tp | dp (see configs/base.py)
     serve_resident: bool = False   # decode: resident E:model x d_ff:data
+    dense_kernel: str = "auto"     # kernels.ops.dense/dense_grouped routing
+                                   # for router, expert FFNs, shared experts
 
 
 def moe_specs(c: MoeConfig):
@@ -92,7 +95,8 @@ def _dispatch(p, c: MoeConfig, xt: jnp.ndarray, C: int):
     Tg, D = xt.shape
     k, E = c.experts_per_token, c.num_experts
 
-    logits = xt.astype(c.router_dtype) @ p["router"].astype(c.router_dtype)
+    logits = dense(xt.astype(c.router_dtype),
+                   p["router"].astype(c.router_dtype), mode=c.dense_kernel)
     probs = jax.nn.softmax(logits, axis=-1)
     top_p, top_e = jax.lax.top_k(probs, k)                      # (Tg, k)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
@@ -112,27 +116,44 @@ def _dispatch(p, c: MoeConfig, xt: jnp.ndarray, C: int):
     return buf, (sorted_e, slot, keep, token_idx, w)
 
 
+def _grouped_ffn(wg, wu, wd, buf: jnp.ndarray, act: str, mode: str) -> jnp.ndarray:
+    """(E, C, D) -> (E, C, D) per-expert FFN through `dense_grouped`: the
+    expert weight stack streams under the GPP batched-expert schedule on
+    TPU; "ref" routing reproduces the plain batched einsums exactly."""
+    if act == "swiglu":
+        h = (dense_grouped(buf, wg, activation="silu", mode=mode)
+             * dense_grouped(buf, wu, mode=mode))
+    else:
+        h = dense_grouped(buf, wu, activation="gelu", mode=mode)
+    return dense_grouped(h, wd, mode=mode)
+
+
 def _expert_ffn(p, c: MoeConfig, buf: jnp.ndarray) -> jnp.ndarray:
-    """(G, E, C, D) -> (G, E, C, D) expert FFN (dense batched einsums).
+    """(G, E, C, D) -> (G, E, C, D) expert FFN (grouped streaming matmuls).
 
     tp mode: expert weights are EP-sharded over `model` and FSDP-sharded
-    over `data`.  We GATHER the data shards explicitly before the einsums —
+    over `data`.  We GATHER the data shards explicitly before the matmuls —
     the paper's write/compute streaming — because letting the partitioner
     handle the sharded contraction dim makes it all-reduce f32 ACTIVATIONS
     over data instead (measured 16x more bytes on kimi-k2: EXPERIMENTS.md
-    §Perf).  The weights cost 2 GB/layer (bf16); the activations 30+ GB."""
+    §Perf).  The weights cost 2 GB/layer (bf16); the activations 30+ GB.
+
+    The token-group axis G folds into the per-expert row dim (E, G*C, D) so
+    each expert's weights stream from HBM once for ALL groups — the grouped
+    kernel's outer-ring expert axis."""
     P = jax.sharding.PartitionSpec
     wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
     if c.ep_mode == "tp":
         wg = _ambient_constraint(wg, P("model", None, None))
         wu = _ambient_constraint(wu, P("model", None, None))
         wd = _ambient_constraint(wd, P("model", None, None))
-    if c.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg))
-        h = h * jnp.einsum("gecd,edf->gecf", buf, wu)
-    else:
-        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, wu))
-    return jnp.einsum("gecf,efd->gecd", h, wd)
+    # NB: under an ambient SPMD mesh, dense_grouped's "auto" routing falls
+    # back to "ref" (ops._ambient_mesh_active) — pallas_call on these
+    # EP/FSDP-sharded stacks would force XLA to all-gather them in full.
+    G, E, C, D = buf.shape
+    rows = buf.swapaxes(0, 1).reshape(E, G * C, D)
+    out = _grouped_ffn(wg, wu, wd, rows, c.act, c.dense_kernel)
+    return out.reshape(E, G, C, D).swapaxes(0, 1)
 
 
 def _combine(out_buf, meta, Tg: int, dtype):
@@ -155,12 +176,7 @@ def _routed_local(p_routed, c: MoeConfig, xt, C: int, n_local: int):
     # slice this model rank's experts out of the replicated dispatch
     idx = jax.lax.axis_index("model")
     bufe = jax.lax.dynamic_slice_in_dim(buf, idx * n_local, n_local, 0)
-    if c.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, wg))
-        h = h * jnp.einsum("ecd,edf->ecf", bufe, wu)
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", bufe, wu))
-    out_e = jnp.einsum("ecf,efd->ecd", h, wd)          # (E_local, C, D)
+    out_e = _grouped_ffn(wg, wu, wd, bufe, c.act, c.dense_kernel)  # (E_local, C, D)
     # place back into the full-E frame so the combine gather stays simple
     out_buf = jnp.zeros((c.num_experts, C, out_e.shape[-1]), out_e.dtype)
     out_buf = jax.lax.dynamic_update_slice_in_dim(out_buf, out_e, idx * n_local, 0)
@@ -227,12 +243,7 @@ def _moe_shard_map_serve(p, c: MoeConfig, x: jnp.ndarray, mesh) -> jnp.ndarray:
         buf, meta = _dispatch({"router": router}, c, xt, C)
         idx = jax.lax.axis_index("model")
         bufe = jax.lax.dynamic_slice_in_dim(buf, idx * n_local, n_local, 0)
-        if c.act == "swiglu":
-            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, wg))
-            h = h * jnp.einsum("ecd,edf->ecf", bufe, wu)
-        else:
-            h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", bufe, wu))
-        out_e = jnp.einsum("ecf,efd->ecd", h, wd)   # F-slice partial
+        out_e = _grouped_ffn(wg, wu, wd, bufe, c.act, c.dense_kernel)  # F-slice partial
         out_buf = jnp.zeros((c.num_experts, C, D), out_e.dtype)
         out_buf = jax.lax.dynamic_update_slice_in_dim(
             out_buf, out_e, idx * n_local, 0)
@@ -301,10 +312,11 @@ def moe_apply(p, c: MoeConfig, x: jnp.ndarray) -> jnp.ndarray:
         xt = x.reshape(T, D)
         sh = p["shared"]
         if c.act == "swiglu":
-            hs = jax.nn.silu(xt @ sh["w_gate"]) * (xt @ sh["w_up"])
+            hs = (dense(xt, sh["w_gate"], activation="silu", mode=c.dense_kernel)
+                  * dense(xt, sh["w_up"], mode=c.dense_kernel))
         else:
-            hs = jax.nn.gelu(xt @ sh["w_up"])
-        out = out + (hs @ sh["w_down"]).reshape(B, S, D)
+            hs = dense(xt, sh["w_up"], activation="gelu", mode=c.dense_kernel)
+        out = out + dense(hs, sh["w_down"], mode=c.dense_kernel).reshape(B, S, D)
 
     return out
 
@@ -313,7 +325,8 @@ def aux_load_balance_loss(p, c: MoeConfig, x: jnp.ndarray) -> jnp.ndarray:
     """Switch-style load-balance auxiliary loss (fraction * probability)."""
     B, S, D = x.shape
     xt = x.reshape(-1, D)
-    logits = xt.astype(c.router_dtype) @ p["router"].astype(c.router_dtype)
+    logits = dense(xt.astype(c.router_dtype),
+                   p["router"].astype(c.router_dtype), mode=c.dense_kernel)
     probs = jax.nn.softmax(logits, axis=-1)
     top_e = jnp.argmax(probs, axis=-1)
     frac = jnp.bincount(top_e, length=c.num_experts).astype(jnp.float32) / xt.shape[0]

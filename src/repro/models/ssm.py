@@ -16,6 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import dense
 from repro.models.layers import sds
 
 CONV_K = 4
@@ -28,6 +29,7 @@ class SsmConfig:
     d_state: int          # N: state dim per channel (zamba2: 64)
     n_heads: int          # channels grouped into heads for dt/A
     dtype: object = jnp.bfloat16
+    dense_mode: str = "auto"   # kernels.ops.dense routing for in/out projections
 
     @property
     def head_dim(self) -> int:
@@ -55,15 +57,16 @@ def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 
 def _ssd_params(p, c: SsmConfig, u):
-    """Shared projections. u: (B,S,D) -> x:(B,S,Di) z, B, C, dt, a."""
-    xz = u @ p["w_in"]
+    """Shared projections (via `kernels.ops.dense`).  u: (B,S,D) ->
+    x:(B,S,Di) z, B, C, dt, a."""
+    xz = dense(u, p["w_in"], mode=c.dense_mode)
     x, z = jnp.split(xz, 2, axis=-1)
     x = _conv1d_causal(x, p["conv_w"])
     x = jax.nn.silu(x)
-    bc = u @ p["w_bc"]
+    bc = dense(u, p["w_bc"], mode=c.dense_mode)
     Bm, Cm = jnp.split(bc, 2, axis=-1)                       # (B,S,N)
     dt = jax.nn.softplus(
-        (u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+        dense(u, p["w_dt"], mode=c.dense_mode).astype(jnp.float32) + p["dt_bias"]
     )                                                        # (B,S,H)
     a = jnp.exp(-dt * jnp.exp(p["A_log"]))                   # decay in (0,1)
     return x, z, Bm, Cm, dt, a
@@ -121,7 +124,7 @@ def _ssd_chunked(p, c: SsmConfig, u: jnp.ndarray):
     y = y + p["D"][None, None, :, None] * xh
     y = y.reshape(B_, S, H * P).astype(u.dtype)
     y = y * jax.nn.silu(z)
-    return y @ p["w_out"], state
+    return dense(y, p["w_out"], mode=c.dense_mode), state
 
 
 def ssm_forward(p, c: SsmConfig, u: jnp.ndarray) -> jnp.ndarray:
@@ -139,7 +142,7 @@ def ssm_prefill(p, c: SsmConfig, u: jnp.ndarray):
     """Returns (y, state) — state carries S_T and the conv tail."""
     B_, S, _ = u.shape
     y, state = _ssd_chunked(p, c, u)
-    xz = u @ p["w_in"]
+    xz = dense(u, p["w_in"], mode=c.dense_mode)
     x_raw, _ = jnp.split(xz, 2, axis=-1)
     conv_tail = x_raw[:, -(CONV_K - 1):]
     if S < CONV_K - 1:
@@ -151,14 +154,15 @@ def ssm_decode(p, c: SsmConfig, u: jnp.ndarray, state):
     """One-step recurrence. u: (B,1,D)."""
     B_, _, _ = u.shape
     H, P, N = c.n_heads, c.head_dim, c.d_state
-    xz = u @ p["w_in"]
+    xz = dense(u, p["w_in"], mode=c.dense_mode)
     x_raw, z = jnp.split(xz, 2, axis=-1)                    # (B,1,Di)
     window = jnp.concatenate([state["conv"], x_raw], axis=1)  # (B,K,Di)
     x = jnp.einsum("bkd,kd->bd", window, p["conv_w"])[:, None]
     x = jax.nn.silu(x)
-    bc = u @ p["w_bc"]
+    bc = dense(u, p["w_bc"], mode=c.dense_mode)
     Bm, Cm = jnp.split(bc, 2, axis=-1)
-    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    dt = jax.nn.softplus(dense(u, p["w_dt"], mode=c.dense_mode)
+                         .astype(jnp.float32) + p["dt_bias"])
     a = jnp.exp(-dt * jnp.exp(p["A_log"]))                  # (B,1,H)
     xh = x.reshape(B_, 1, H, P).astype(jnp.float32)
     contrib = jnp.einsum("bsh,bshp,bsn->bhpn", dt, xh, Bm.astype(jnp.float32))
@@ -167,4 +171,4 @@ def ssm_decode(p, c: SsmConfig, u: jnp.ndarray, state):
     y = y + p["D"][None, :, None] * xh[:, 0]
     y = y.reshape(B_, 1, H * P).astype(u.dtype)
     y = y * jax.nn.silu(z)
-    return y @ p["w_out"], {"s": s_new, "conv": window[:, 1:]}
+    return dense(y, p["w_out"], mode=c.dense_mode), {"s": s_new, "conv": window[:, 1:]}

@@ -56,6 +56,7 @@ def _attn_cfg(cfg: ModelConfig, kind: str) -> attn.AttnConfig:
         q_lora_rank=cfg.q_lora_rank,
         rope_head_dim=cfg.rope_head_dim,
         dtype=cfg.jdtype,
+        dense_mode=cfg.dense_kernel,
     )
 
 
@@ -66,12 +67,14 @@ def _ssm_cfg(cfg: ModelConfig) -> ssm_mod.SsmConfig:
         d_state=cfg.ssm_state_dim,
         n_heads=cfg.num_heads,
         dtype=cfg.jdtype,
+        dense_mode=cfg.dense_kernel,
     )
 
 
 def _xlstm_cfg(cfg: ModelConfig) -> xlstm_mod.XlstmConfig:
     return xlstm_mod.XlstmConfig(
-        d_model=cfg.d_model, n_heads=cfg.num_heads, dtype=cfg.jdtype
+        d_model=cfg.d_model, n_heads=cfg.num_heads, dtype=cfg.jdtype,
+        dense_mode=cfg.dense_kernel,
     )
 
 
@@ -87,6 +90,7 @@ def _moe_cfg(cfg: ModelConfig) -> moe_mod.MoeConfig:
         dtype=cfg.jdtype,
         ep_mode=cfg.moe_ep_mode,
         serve_resident=cfg.moe_serve_resident,
+        dense_kernel=cfg.dense_kernel,
     )
 
 

@@ -15,6 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import dense
 from repro.models.layers import sds
 
 
@@ -23,6 +24,7 @@ class XlstmConfig:
     d_model: int
     n_heads: int
     dtype: object = jnp.bfloat16
+    dense_mode: str = "auto"   # kernels.ops.dense routing for all projections
 
     @property
     def head_dim(self) -> int:
@@ -57,9 +59,9 @@ def mlstm_state_specs(c: XlstmConfig, batch: int):
     }
 
 
-def _mlstm_gates(p, x):
-    i = (x @ p["w_i"]).astype(jnp.float32) + p["b_i"]
-    f = (x @ p["w_f"]).astype(jnp.float32) + p["b_f"]
+def _mlstm_gates(p, c: XlstmConfig, x):
+    i = dense(x, p["w_i"], mode=c.dense_mode).astype(jnp.float32) + p["b_i"]
+    f = dense(x, p["w_f"], mode=c.dense_mode).astype(jnp.float32) + p["b_f"]
     logf = -jax.nn.softplus(-f)           # log sigmoid(f): stable
     return i, logf
 
@@ -69,9 +71,9 @@ MLSTM_CHUNK = 256  # quadratic window kept VMEM-sized (TPU adaptation)
 
 def _mlstm_qkv(p, c: XlstmConfig, x):
     hd = c.head_dim
-    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"]).astype(jnp.float32)
-    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"]).astype(jnp.float32) / (hd ** 0.5)
-    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"]).astype(jnp.float32)
+    q = dense(x, p["w_q"], mode=c.dense_mode).astype(jnp.float32)
+    k = dense(x, p["w_k"], mode=c.dense_mode).astype(jnp.float32) / (hd ** 0.5)
+    v = dense(x, p["w_v"], mode=c.dense_mode).astype(jnp.float32)
     return q, k, v
 
 
@@ -85,7 +87,7 @@ def _mlstm_chunk_scan(p, c: XlstmConfig, x, state0):
         raise ValueError(f"seq len {S} must be divisible by chunk {L}")
     nc = S // L
     q, k, v = _mlstm_qkv(p, c, x)
-    i, logf = _mlstm_gates(p, x)          # (B,S,h)
+    i, logf = _mlstm_gates(p, c, x)       # (B,S,h)
 
     def reshape_c(t):  # (B,S,...) -> (nc,B,L,...)
         return t.reshape(B, nc, L, *t.shape[2:]).swapaxes(0, 1)
@@ -140,16 +142,17 @@ def _mlstm_state0(c: XlstmConfig, B: int):
 def mlstm_forward(p, c: XlstmConfig, x: jnp.ndarray) -> jnp.ndarray:
     B = x.shape[0]
     hid, _ = _mlstm_chunk_scan(p, c, x, _mlstm_state0(c, B))
-    o = jax.nn.sigmoid(x @ p["ogate"])
-    y = jnp.einsum("bthk,hkd->btd", hid.astype(x.dtype), p["w_o"])
+    o = dense(x, p["ogate"], activation="sigmoid", mode=c.dense_mode)
+    y = dense(hid.astype(x.dtype), p["w_o"], mode=c.dense_mode, contract_dims=2)
     return y * o
 
 
 def mlstm_prefill(p, c: XlstmConfig, x: jnp.ndarray):
     B = x.shape[0]
     hid, state = _mlstm_chunk_scan(p, c, x, _mlstm_state0(c, B))
-    o = jax.nn.sigmoid(x @ p["ogate"])
-    y = jnp.einsum("bthk,hkd->btd", hid.astype(x.dtype), p["w_o"]) * o
+    o = dense(x, p["ogate"], activation="sigmoid", mode=c.dense_mode)
+    y = dense(hid.astype(x.dtype), p["w_o"], mode=c.dense_mode,
+              contract_dims=2) * o
     return y, state
 
 
@@ -157,10 +160,10 @@ def mlstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
     """One-step recurrence. x: (B,1,D)."""
     B = x.shape[0]
     h, hd = c.n_heads, c.head_dim
-    q = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_q"]).astype(jnp.float32)
-    k = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_k"]).astype(jnp.float32) / (hd ** 0.5)
-    v = jnp.einsum("bd,dhk->bhk", x[:, 0], p["w_v"]).astype(jnp.float32)
-    i, logf = _mlstm_gates(p, x[:, 0])
+    q = dense(x[:, 0], p["w_q"], mode=c.dense_mode).astype(jnp.float32)
+    k = dense(x[:, 0], p["w_k"], mode=c.dense_mode).astype(jnp.float32) / (hd ** 0.5)
+    v = dense(x[:, 0], p["w_v"], mode=c.dense_mode).astype(jnp.float32)
+    i, logf = _mlstm_gates(p, c, x[:, 0])
     m_new = jnp.maximum(logf + state["m"], i)
     fw = jnp.exp(logf + state["m"] - m_new)[..., None]
     iw = jnp.exp(i - m_new)[..., None]
@@ -169,8 +172,8 @@ def mlstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
     num = jnp.einsum("bhk,bhkv->bhv", q, M)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
     out = (num / den[..., None]).astype(x.dtype)
-    o = jax.nn.sigmoid(x[:, 0] @ p["ogate"])
-    y = jnp.einsum("bhk,hkd->bd", out, p["w_o"]) * o
+    o = dense(x[:, 0], p["ogate"], activation="sigmoid", mode=c.dense_mode)
+    y = dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2) * o
     return y[:, None], {"M": M, "n": n, "m": m_new}
 
 
@@ -209,11 +212,12 @@ def _slstm_step(p, c: XlstmConfig, state, inputs):
 
 def _slstm_inputs(p, c: XlstmConfig, x):
     B, S, D = x.shape
-    z = jnp.tanh((x @ p["w_z"]).astype(jnp.float32)).reshape(B, S, c.n_heads, c.head_dim)
-    i = (x @ p["w_i"]).astype(jnp.float32) + p["b_i"]
-    f = (x @ p["w_f"]).astype(jnp.float32) + p["b_f"]
+    z = jnp.tanh(dense(x, p["w_z"], mode=c.dense_mode).astype(jnp.float32)
+                 ).reshape(B, S, c.n_heads, c.head_dim)
+    i = dense(x, p["w_i"], mode=c.dense_mode).astype(jnp.float32) + p["b_i"]
+    f = dense(x, p["w_f"], mode=c.dense_mode).astype(jnp.float32) + p["b_f"]
     logf = -jax.nn.softplus(-f)
-    og = jax.nn.sigmoid(x @ p["w_og"])
+    og = dense(x, p["w_og"], activation="sigmoid", mode=c.dense_mode)
     return z, i, logf, og
 
 
@@ -235,7 +239,7 @@ def slstm_forward(p, c: XlstmConfig, x: jnp.ndarray) -> jnp.ndarray:
          jnp.zeros((S, 1), jnp.float32)),
     )
     h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
-    return (h * og) @ p["w_out"]
+    return dense(h * og, p["w_out"], mode=c.dense_mode)
 
 
 def slstm_prefill(p, c: XlstmConfig, x: jnp.ndarray):
@@ -256,7 +260,7 @@ def slstm_prefill(p, c: XlstmConfig, x: jnp.ndarray):
          jnp.zeros((S, 1), jnp.float32)),
     )
     h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
-    return (h * og) @ p["w_out"], state
+    return dense(h * og, p["w_out"], mode=c.dense_mode), state
 
 
 def slstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
@@ -266,5 +270,5 @@ def slstm_decode(p, c: XlstmConfig, x: jnp.ndarray, state):
     )
     B, D = x.shape[0], x.shape[2]
     h = h.reshape(B, D).astype(x.dtype)
-    y = (h * og[:, 0]) @ p["w_out"]
+    y = dense(h * og[:, 0], p["w_out"], mode=c.dense_mode)
     return y[:, None], new_state

@@ -33,10 +33,12 @@ class ServeConfig:
     max_len: int = 256             # cache capacity per lane
     temperature: float = 0.0       # 0 => greedy
     eos_token: int | None = None
-    dense_kernel: str | None = None  # override cfg.dense_kernel at serve time:
-                                     # "kernel" streams dense weights through
-                                     # the GPP Pallas matmul instead of the
-                                     # reference path at large shapes
+    dense_kernel: str | None = None  # override cfg.dense_kernel at serve time;
+                                     # threads through prefill AND decode, so
+                                     # "kernel" streams every projection (attn
+                                     # q/k/v/o, MLA, MoE experts, SSM/xLSTM)
+                                     # through the GPP Pallas matmul instead
+                                     # of the reference path at large shapes
 
 
 @dataclasses.dataclass

@@ -66,6 +66,10 @@ class TestCheckpoint:
         with pytest.raises(ValueError, match="shape"):
             mgr.restore(bad)
 
+    @pytest.mark.skipif(
+        not hasattr(jax.sharding, "AxisType"),
+        reason="needs jax.sharding.AxisType (explicit-mesh API), not in "
+               f"jax {jax.__version__}; port or gate in a follow-up PR")
     def test_elastic_resume_across_meshes(self, tmp_path):
         """Save under one sharding, restore onto a different mesh — the
         elastic-rescale story (device count changed between jobs).  Runs in a

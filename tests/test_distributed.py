@@ -3,6 +3,11 @@
 These need multiple devices, so each runs in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count set there — the main pytest
 process keeps the default single device (smoke tests must not see 512).
+
+Every test here drives the explicit-mesh API (`jax.sharding.AxisType`,
+`jax.set_mesh`) introduced after jax 0.4.37, directly or through
+`repro.launch.*` — on older jax they are version-gated skips, not failures
+(ROADMAP "Known-failing on jax 0.4.37").
 """
 import json
 import os
@@ -11,6 +16,16 @@ import sys
 import textwrap
 
 import pytest
+
+import jax
+
+JAX_HAS_EXPLICIT_MESH = (hasattr(jax.sharding, "AxisType")
+                         and hasattr(jax, "set_mesh"))
+pytestmark = pytest.mark.skipif(
+    not JAX_HAS_EXPLICIT_MESH,
+    reason="needs the explicit-mesh API (jax.sharding.AxisType / jax.set_mesh),"
+           f" not in jax {jax.__version__}; port or gate in a follow-up PR",
+)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

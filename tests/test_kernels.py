@@ -7,6 +7,8 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
+pytestmark = pytest.mark.tier1
+
 from repro.core.schedule import plan_matmul_tiles
 from repro.kernels.gpp_matmul import (
     _chunk_bounds, chunk_issue_schedule, gpp_matmul,

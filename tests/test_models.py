@@ -11,6 +11,8 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.layers import init_from_specs
 
+pytestmark = pytest.mark.tier1
+
 KEY = jax.random.PRNGKey(42)
 B, S, D = 2, 16, 32
 
