@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV (derived = the headline quantity the
 paper reports for that table/figure) and mirrors every row into
 ``BENCH_kernels.json`` (name -> {us_per_call, derived}) so the perf
-trajectory is machine-readable across PRs.
+trajectory is machine-readable across PRs.  Serving benchmarks append into
+``BENCH_serving.json`` (same append-don't-rename contract).
 Run:  PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
@@ -14,12 +15,36 @@ import os
 import time
 
 RESULTS: "dict[str, dict]" = {}
+SERVING_RESULTS: "dict[str, dict]" = {}
 
 # anchored to the repo root (not the CWD) so the tracked perf record and
 # TimingCache.from_bench_json consumers always see the same file
-BENCH_JSON = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_kernels.json")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_kernels.json")
+BENCH_SERVING_JSON = os.path.join(_ROOT, "BENCH_serving.json")
+
+
+def _record_serving(name: str, us: float, derived: str,
+                    extra: dict | None = None) -> None:
+    entry = {"us_per_call": round(us, 1), "derived": derived}
+    if extra:
+        entry.update(extra)
+    SERVING_RESULTS[name] = entry
+    print(f"{name},{us:.1f},{derived}")
+
+
+def _append_json(path: str, entries: "dict[str, dict]") -> None:
+    """Merge `entries` into the JSON record at `path` (append, don't rename:
+    existing keys from earlier PRs survive unless overwritten by name)."""
+    record: dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+    record.update(entries)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(entries)} updated / {len(record)} total)")
 
 
 def _timed(fn):
@@ -397,6 +422,99 @@ def bench_dense_timing_samples():
         extra={"samples": tc.to_json()})
 
 
+def bench_serving_paged_vs_dense():
+    """Serving: paged-KV chunked-prefill engine vs the seed dense-cache
+    engine on a mixed prefill/decode trace with a saturating queue, at EQUAL
+    block-memory budget (paged pool = slots x max_len tokens, shared).
+
+    Headline: aggregate tokens/sec speedup (target >= 1.5x) and the per-step
+    token-count flatness (coefficient of variation; the GPP claim is that
+    chunking the prefill burst flattens per-step traffic)."""
+    import jax
+    import numpy as np
+    from repro.models import registry
+    from repro.models import transformer as tf
+    from repro.serving import DenseServingEngine, ServeConfig, ServingEngine
+
+    SLOTS, MAX_LEN, REQUESTS, MAX_NEW = 4, 128, 16, 12
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+
+    def trace(engine):
+        # saturating queue: every request submitted before the first step,
+        # prompt lengths drawn from a wide mix (re-jit worst case)
+        rng = np.random.default_rng(0)
+        rids = [engine.submit(
+            rng.integers(0, cfg.vocab_size, size=int(n)).tolist(),
+            max_new_tokens=MAX_NEW)
+            for n in rng.integers(4, 60, size=REQUESTS)]
+        t0 = time.perf_counter()
+        results = engine.run()
+        dt = time.perf_counter() - t0
+        tokens = sum(len(results[r]) for r in rids)
+        assert len(results) == REQUESTS
+        return tokens / dt, engine.flatness_cov(), dt
+
+    serve = ServeConfig(slots=SLOTS, max_len=MAX_LEN)
+    tps_dense, cov_dense, dt_dense = trace(
+        DenseServingEngine(cfg, params, serve))
+    paged = ServingEngine(cfg, params, serve)
+    tps_paged, cov_paged, dt_paged = trace(paged)
+
+    speedup = tps_paged / tps_dense
+    _record_serving(
+        "serving_paged_vs_dense", dt_paged * 1e6,
+        f"speedup={speedup:.2f}x_tok/s={tps_paged:.0f}vs{tps_dense:.0f}"
+        f"_cov={cov_paged:.3f}vs{cov_dense:.3f}",
+        extra={
+            "tokens_per_s_paged": round(tps_paged, 1),
+            "tokens_per_s_dense": round(tps_dense, 1),
+            "speedup": round(speedup, 3),
+            "tokens_per_step_cov_paged": round(cov_paged, 4),
+            "tokens_per_step_cov_dense": round(cov_dense, 4),
+            "slots": SLOTS, "max_len": MAX_LEN,
+            "block_size": paged.block_size, "prefill_chunk": paged.chunk,
+            "num_blocks": paged.kv.cfg.num_blocks,
+            "requests": REQUESTS, "max_new": MAX_NEW,
+            "trace_counts_paged": dict(paged.trace_counts),
+        })
+
+
+def bench_serving_step_metrics():
+    """Per-step metric export: blocks in use / queue depth / projected HBM
+    bytes from the paged engine on a short saturating burst."""
+    import jax
+    import numpy as np
+    from repro.core.schedule import tokens_per_step_cov
+    from repro.models import registry
+    from repro.models import transformer as tf
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run():
+        eng = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+        rng = np.random.default_rng(1)
+        for n in (24, 17, 9, 30):
+            eng.submit(rng.integers(0, cfg.vocab_size, size=n).tolist(),
+                       max_new_tokens=6)
+        eng.run()
+        peak_blocks = max(m["blocks_in_use"] for m in eng.metrics)
+        peak_q = max(m["queue_depth"] for m in eng.metrics)
+        bytes_cov = tokens_per_step_cov([m["hbm_bytes"] for m in eng.metrics])
+        return eng, peak_blocks, peak_q, bytes_cov
+
+    us, (eng, peak_blocks, peak_q, bytes_cov) = _timed(run)
+    _record_serving(
+        "serving_step_metrics", us,
+        f"steps={len(eng.metrics)}_peak_blocks={peak_blocks}"
+        f"_peak_queue={peak_q}_hbm_bytes_cov={bytes_cov:.3f}",
+        extra={"steps": len(eng.metrics), "peak_blocks_in_use": peak_blocks,
+               "peak_queue_depth": peak_q,
+               "hbm_bytes_per_step_cov": round(bytes_cov, 4)})
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     try:
@@ -411,6 +529,8 @@ def main() -> None:
         bench_dense_attn_projection()
         bench_dense_grouped_moe()
         bench_dense_timing_samples()
+        bench_serving_paged_vs_dense()
+        bench_serving_step_metrics()
         bench_streamer_modes()
     finally:
         # keep the partial perf record even if one benchmark dies mid-run
@@ -418,6 +538,8 @@ def main() -> None:
             json.dump(RESULTS, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {BENCH_JSON} ({len(RESULTS)} entries)")
+        if SERVING_RESULTS:
+            _append_json(BENCH_SERVING_JSON, SERVING_RESULTS)
 
 
 if __name__ == "__main__":

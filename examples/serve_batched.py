@@ -1,5 +1,5 @@
-"""Serve a small model with batched requests through the continuous-batching
-engine (prefill + slot-pool decode).
+"""Serve a small model with batched requests through the paged-KV
+continuous-batching engine (chunked prefill + block-table decode).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -34,6 +34,9 @@ def main():
         print(f"req {rid}: {results[rid]}")
     print(f"{tokens} tokens across {len(rids)} requests in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s, continuous batching over 4 slots)")
+    print(f"tokens/step cov={engine.flatness_cov():.3f} "
+          f"(chunk={engine.chunk}, block={engine.block_size}, "
+          f"compiled shapes={engine.trace_counts})")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 verify gate (ROADMAP.md): the full test suite, -x -q.
+# Tier-1 verify gate (ROADMAP.md): the full test suite, -x -q, followed by a
+# serving smoke run (paged engine end-to-end through launch/serve).
 #
 # Known version-gated skips (jax < 0.5 lacks jax.sharding.AxisType /
 # jax.set_mesh) show up as SKIPPED with a reason, not failures — see
@@ -10,4 +11,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+echo "--- serving smoke (paged engine) ---"
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+    --requests 3 --max-new 4 --slots 2 --max-len 64

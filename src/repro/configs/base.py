@@ -65,6 +65,13 @@ class ModelConfig:
                                      # Pallas kernel on TPU, jnp elsewhere
     remat: str = "block"             # none | block  (activation checkpointing)
     optimizer: str = "adamw"         # adamw | adafactor (1T-scale state budget)
+    # serving (paged-KV engine defaults; ServeConfig fields of the same
+    # concept override per deployment)
+    serve_block_size: int = 16       # tokens per paged-KV block
+    serve_token_budget: int = 0      # flat per-step token target for the
+                                     # chunked-prefill scheduler; 0 = auto
+                                     # (slots + 2 blocks — one chunk of
+                                     # prefill riding along with full decode)
 
     @property
     def jdtype(self):

@@ -250,6 +250,44 @@ def plan_stream(
 
 
 # ---------------------------------------------------------------------------
+# Serving chunk planner: GPP flatness applied to prefill
+# ---------------------------------------------------------------------------
+
+def plan_serve_chunk(*, token_budget: int, decode_lanes: int,
+                     block_size: int) -> int:
+    """Prefill chunk size for the paged serving engine (serving/scheduler.py).
+
+    Same math as `plan_stream`'s chunking, one level up: a prompt's prefill
+    is the bursty "rewrite" (its KV-write and weight-read traffic), decode
+    steps are the compute slots, and the flat-bandwidth condition is that
+    every step moves the same token count.  A step carries up to
+    `decode_lanes` decode tokens plus one prefill chunk, so the chunk is the
+    largest KV-block multiple that keeps the step at or under the flat
+    `token_budget` target — the per-step analogue of "each compute slot
+    carries ~1/ratio of a block".
+    """
+    if block_size < 1:
+        raise ValueError("block_size >= 1")
+    if decode_lanes < 0:
+        raise ValueError("decode_lanes >= 0")
+    spare = max(block_size, token_budget - decode_lanes)
+    return max(block_size, (spare // block_size) * block_size)
+
+
+def tokens_per_step_cov(counts: "list[int] | list[float]") -> float:
+    """Coefficient of variation of per-step token counts — the serving
+    flatness metric (0 = perfectly flat traffic, the GPP ideal; the seed
+    engine's prefill bursts push it >> 1)."""
+    counts = [float(c) for c in counts]
+    if not counts:
+        return 0.0
+    mean = sum(counts) / len(counts)
+    if mean == 0:
+        return 0.0
+    return statistics.pstdev(counts) / mean
+
+
+# ---------------------------------------------------------------------------
 # Measured-timing feedback: TimingCache
 # ---------------------------------------------------------------------------
 
@@ -367,7 +405,8 @@ _LANE = 128     # TPU lane width: block_n granularity
 _SUBLANE = 8    # f32 sublane: block_m / block_k granularity
 
 
-def _round_up(x: int, mult: int) -> int:
+def round_up(x: int, mult: int) -> int:
+    """Smallest multiple of `mult` >= x (tile, block, and chunk sizing)."""
     return ((x + mult - 1) // mult) * mult
 
 
@@ -453,9 +492,9 @@ def plan_matmul_tiles(
         raise ValueError(f"bad matmul shape M={M} K={K} N={N}")
     if num_bufs is not None and num_bufs < 1:
         raise ValueError("num_bufs >= 1")
-    bn = block_n if block_n is not None else min(_round_up(N, _LANE), 256)
-    bm = block_m if block_m is not None else min(_round_up(M, _SUBLANE), 512)
-    bk = block_k if block_k is not None else min(_round_up(K, _SUBLANE), 2048)
+    bn = block_n if block_n is not None else min(round_up(N, _LANE), 256)
+    bm = block_m if block_m is not None else min(round_up(M, _SUBLANE), 512)
+    bk = block_k if block_k is not None else min(round_up(K, _SUBLANE), 2048)
 
     def ring_for(bm_, bk_, bn_):
         if num_bufs is not None:
@@ -477,14 +516,14 @@ def plan_matmul_tiles(
     g = ring_for(bm, bk, bn)
     while not fits(bm, bk, bn, g):
         if block_k is None and bk > _LANE:
-            bk = max(_LANE, _round_up(bk // 2, _SUBLANE))
+            bk = max(_LANE, round_up(bk // 2, _SUBLANE))
         elif block_m is None and bm > _SUBLANE:
-            bm = max(_SUBLANE, _round_up(bm // 2, _SUBLANE))
+            bm = max(_SUBLANE, round_up(bm // 2, _SUBLANE))
         elif num_bufs is None and g > 1:
             g -= 1          # last resort ends at in-situ (G=1), a valid mode
             continue
         elif block_n is None and bn > _LANE:
-            bn = max(_LANE, _round_up(bn // 2, _LANE))
+            bn = max(_LANE, round_up(bn // 2, _LANE))
         else:
             used = matmul_vmem_bytes(
                 bm, bn, bk, g, x_itemsize=x_itemsize, w_itemsize=w_itemsize,
@@ -501,7 +540,7 @@ def plan_matmul_tiles(
     # extra m-pass re-streams the whole weight matrix from HBM, which is
     # exactly the traffic this kernel exists to minimize.
     if block_m is None:
-        M_full = _round_up(M, _SUBLANE)
+        M_full = round_up(M, _SUBLANE)
         while bm < M_full:
             bm_try = min(M_full, bm * 2)
             g_try = ring_for(bm_try, bk, bn)

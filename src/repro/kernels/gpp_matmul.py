@@ -345,7 +345,8 @@ def gpp_matmul(
 # ---------------------------------------------------------------------------
 
 def _gpp_grouped_kernel(*refs, grid_emnk: tuple, num_bufs: int, bm: int,
-                        bn: int, bk: int, C: int, has_bias: bool, activation,
+                        bn: int, bk: int, C: int, has_scale: bool,
+                        has_bias: bool, activation,
                         out_dtype, w_dtype, x_dtype):
     """Pallas kernel body; grid = (E, num_m, num_n, num_k), k innermost.
 
@@ -360,7 +361,9 @@ def _gpp_grouped_kernel(*refs, grid_emnk: tuple, num_bufs: int, bm: int,
     x_ref = refs[0]
     w_hbm = refs[1]
     i = 2
-    bias_ref = None
+    scale_ref = bias_ref = None
+    if has_scale:
+        scale_ref = refs[i]; i += 1
     if has_bias:
         bias_ref = refs[i]; i += 1
     y_ref = refs[i]
@@ -415,6 +418,8 @@ def _gpp_grouped_kernel(*refs, grid_emnk: tuple, num_bufs: int, bm: int,
     @pl.when(k == nk - 1)
     def _epilogue():
         out = acc_ref[...]
+        if has_scale:
+            out = out * scale_ref[...]           # (1, bn) per-expert dequant
         if has_bias:
             out = out + bias_ref[...]
         out = _ACTIVATIONS[activation](out)
@@ -432,6 +437,7 @@ def gpp_matmul_grouped(
     w: jnp.ndarray,
     *,
     bias: jnp.ndarray | None = None,
+    w_scale: jnp.ndarray | None = None,
     activation: str | None = None,
     block_m: int | None = None,
     block_n: int | None = None,
@@ -448,6 +454,10 @@ def gpp_matmul_grouped(
          expert axis as the outermost ring dimension (each expert's weights
          cross the link once per step; the ring pipelines across experts).
       bias: optional (E, F) per-expert bias fused into the epilogue.
+      w_scale: optional per-expert per-column dequant scale — scalar, (E,)
+         or (E, F) — applied to the f32 accumulator in the epilogue before
+         bias/activation, so int8 expert weights stream raw through the ring
+         and widen in-kernel exactly like the flat kernel's dequant path.
       activation: optional fused activation (see `_ACTIVATIONS`).
       block_*/num_bufs/vmem_budget: as `gpp_matmul`, planned per expert.
       interpret: run the kernel body in interpret mode (CPU validation).
@@ -485,7 +495,15 @@ def gpp_matmul_grouped(
         pl.BlockSpec((1, bm, bk), lambda e, m, n, k: (e, m, k)),  # x tile
         pl.BlockSpec(memory_space=pl.ANY),                        # w: HBM
     ]
+    has_scale = w_scale is not None
     has_bias = bias is not None
+    if has_scale:
+        sc = jnp.asarray(w_scale, jnp.float32)
+        sc = jnp.broadcast_to(sc if sc.ndim == 0 else sc.reshape(E, -1), (E, N))
+        if N != Np:
+            sc = jnp.pad(sc, ((0, 0), (0, Np - N)))
+        operands.append(sc)
+        in_specs.append(pl.BlockSpec((1, bn), lambda e, m, n, k: (e, n)))
     if has_bias:
         b = jnp.asarray(bias, jnp.float32).reshape(E, N)
         if N != Np:
@@ -495,7 +513,8 @@ def gpp_matmul_grouped(
 
     kernel = functools.partial(
         _gpp_grouped_kernel, grid_emnk=(E, num_m, num_n, num_k), num_bufs=G,
-        bm=bm, bn=bn, bk=bk, C=C, has_bias=has_bias, activation=activation,
+        bm=bm, bn=bn, bk=bk, C=C, has_scale=has_scale, has_bias=has_bias,
+        activation=activation,
         out_dtype=out_dtype, w_dtype=w.dtype, x_dtype=x.dtype,
     )
     y = pl.pallas_call(

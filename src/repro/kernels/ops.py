@@ -260,25 +260,25 @@ def dense(
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _dense_grouped_kernel(activation, interpret, x3, w, bias):
+def _dense_grouped_kernel(activation, interpret, x3, w, bias, w_scale):
     """Grouped kernel-path forward with a ref-math VJP (see `_dense_kernel`):
     backward recomputes through `dense_grouped_ref`, the same f32 math the
     grouped kernel implements."""
-    return gpp_matmul_grouped(x3, w, bias=bias, activation=activation,
-                              interpret=interpret)
+    return gpp_matmul_grouped(x3, w, bias=bias, w_scale=w_scale,
+                              activation=activation, interpret=interpret)
 
 
-def _dense_grouped_kernel_fwd(activation, interpret, x3, w, bias):
-    y = _dense_grouped_kernel(activation, interpret, x3, w, bias)
-    return y, (x3, w, bias)
+def _dense_grouped_kernel_fwd(activation, interpret, x3, w, bias, w_scale):
+    y = _dense_grouped_kernel(activation, interpret, x3, w, bias, w_scale)
+    return y, (x3, w, bias, w_scale)
 
 
 def _dense_grouped_kernel_bwd(activation, interpret, res, g):
-    x3, w, bias = res
+    x3, w, bias, w_scale = res
     _, pullback = jax.vjp(
-        lambda xx, ww, bb: dense_grouped_ref(xx, ww, bias=bb,
-                                             activation=activation),
-        x3, w, bias)
+        lambda xx, ww, bb, ss: dense_grouped_ref(xx, ww, bias=bb, w_scale=ss,
+                                                 activation=activation),
+        x3, w, bias, w_scale)
     return pullback(g)
 
 
@@ -290,17 +290,22 @@ def dense_grouped(
     w: jnp.ndarray,
     *,
     bias: jnp.ndarray | None = None,
+    w_scale: jnp.ndarray | None = None,
     activation: str | None = None,
     mode: str = "auto",
 ) -> jnp.ndarray:
-    """Per-expert act(x[e] @ w[e] [+ bias[e]]): (E, C, D) @ (E, D, F).
+    """Per-expert act(x[e] @ w[e] [* w_scale[e]] [+ bias[e]]):
+    (E, C, D) @ (E, D, F).
 
     The MoE companion to `dense`: the streaming plan treats the expert axis
     as the outermost ring dimension, so expert weights stream from HBM once
     per step and the ring pipelines across experts (the paper's
-    consecutive-GeMM workload with per-round activations).  Modes as in
-    `dense`; "ref" reproduces the models' plain batched-einsum math
-    bit-for-bit.
+    consecutive-GeMM workload with per-round activations).  `w_scale`
+    (scalar, (E,), or (E, F)) is the int8 dequant path: expert weights
+    stream raw and the scale folds into the fused epilogue, mirroring the
+    flat kernel.  Modes as in `dense`; "ref" reproduces the models' plain
+    batched-einsum math bit-for-bit (dequant pre-scales the weights, like
+    `dense`'s ref path).
     """
     if mode not in DENSE_MODES:
         raise ValueError(f"dense mode must be one of {DENSE_MODES}, got {mode!r}")
@@ -314,8 +319,13 @@ def dense_grouped(
     if mode == "auto":
         mode = _resolve_auto_mode(x, w)
     if mode == "ref":
+        if w_scale is not None:
+            sc = jnp.asarray(w_scale, jnp.float32)
+            sc = sc if sc.ndim == 0 else sc.reshape(w.shape[0], 1, -1)
+            w = (w.astype(jnp.float32) * sc).astype(x.dtype)
         y = jnp.einsum("ecd,edf->ecf", x, w)
         if bias is not None:
             y = y + bias[:, None, :].astype(y.dtype)
         return _ACTIVATIONS[activation](y)
-    return _dense_grouped_kernel(activation, mode == "interpret", x, w, bias)
+    return _dense_grouped_kernel(activation, mode == "interpret", x, w, bias,
+                                 w_scale)

@@ -24,13 +24,20 @@ def dense_ref(x: jnp.ndarray, w: jnp.ndarray, *, bias=None, w_scale=None,
 
 
 def dense_grouped_ref(x: jnp.ndarray, w: jnp.ndarray, *, bias=None,
-                      activation: str | None = None) -> jnp.ndarray:
+                      w_scale=None, activation: str | None = None) -> jnp.ndarray:
     """Oracle for gpp_matmul_grouped's fused epilogue: per-expert
-    y[e] = act(x[e] @ w[e] [+ bias[e]]), f32 accumulation, cast to x.dtype."""
+    y[e] = act(x[e] @ w[e] [* w_scale[e]] [+ bias[e]]), f32 accumulation
+    with the dequant scale applied post-accumulation (int8 streaming),
+    cast to x.dtype."""
     from repro.kernels.gpp_matmul import _ACTIVATIONS  # single source of truth
+    E = x.shape[0]
     acc = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
                      w.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
+    if w_scale is not None:
+        sc = jnp.asarray(w_scale, jnp.float32)
+        sc = sc if sc.ndim == 0 else sc.reshape(E, 1, -1)
+        acc = acc * sc
     if bias is not None:
         acc = acc + jnp.asarray(bias, jnp.float32)[:, None, :]
     return _ACTIVATIONS[activation](acc).astype(x.dtype)

@@ -1,4 +1,6 @@
-"""Serving driver: batched request decode with the continuous-batching engine.
+"""Serving driver: batched request decode through the paged-KV engine
+(chunked prefill + continuous batching), with the dense-cache engine as the
+recurrent-arch fallback / comparison baseline.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \\
       --requests 6 --max-new 16
@@ -6,7 +8,6 @@
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 
@@ -18,6 +19,14 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--engine", choices=("auto", "paged", "dense"),
+                    default="auto")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged-KV block size (0 = cfg.serve_block_size)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill chunk tokens (0 = plan_serve_chunk)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     import jax
@@ -25,15 +34,25 @@ def main(argv=None):
 
     from repro.models import registry
     from repro.models import transformer as tf
-    from repro.serving.engine import ServeConfig, ServingEngine
+    from repro.serving import (DenseServingEngine, ServeConfig, ServingEngine,
+                               make_engine)
 
     cfg = registry.get_config(args.arch, smoke=args.smoke)
     if cfg.input_mode != "tokens":
         raise SystemExit(f"{args.arch} takes embedding inputs; serve the token "
                          "archs (stub frontends have no tokenizer)")
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, ServeConfig(
-        slots=args.slots, max_len=args.max_len))
+    serve = ServeConfig(
+        slots=args.slots, max_len=args.max_len, temperature=args.temperature,
+        seed=args.seed, block_size=args.block_size,
+        prefill_chunk=args.prefill_chunk)
+    if args.engine == "paged":
+        engine = ServingEngine(cfg, params, serve)
+    elif args.engine == "dense":
+        engine = DenseServingEngine(cfg, params, serve)
+    else:
+        engine = make_engine(cfg, params, serve)
+    kind = type(engine).__name__
 
     rng = np.random.default_rng(0)
     rids = []
@@ -47,7 +66,12 @@ def main(argv=None):
     for rid in rids:
         print(f"request {rid}: {len(results[rid])} tokens -> {results[rid][:8]}...")
     print(f"{len(rids)} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s aggregate)")
+          f"({total_tokens/dt:.1f} tok/s aggregate, {kind})")
+    if engine.metrics:
+        peak_blocks = max(m.get("blocks_in_use", 0) for m in engine.metrics)
+        print(f"steps={len(engine.metrics)} tokens/step_cov="
+              f"{engine.flatness_cov():.3f} peak_blocks={peak_blocks} "
+              f"traces={getattr(engine, 'trace_counts', {})}")
     return results
 
 

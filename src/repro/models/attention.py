@@ -360,6 +360,137 @@ def gqa_decode(p, c: AttnConfig, x, cache, pos):
 
 
 # ---------------------------------------------------------------------------
+# paged KV (block-pool) read/write — serving subsystem
+# ---------------------------------------------------------------------------
+#
+# Pool layouts (no per-lane batch dim; capacity shared across lanes):
+#   full/window k/v: (num_blocks, block_size, KVH, hd)
+#   MLA            : c_kv (num_blocks, block_size, kv_lora),
+#                    k_rope (num_blocks, block_size, rope_dim)
+# A lane's logical block b (absolute positions [b*bs, (b+1)*bs)) lives at
+# physical block `tables[lane, b]`; block 0 is the reserved null/scratch
+# block (unmapped reads land there and are masked, inactive writes are
+# parked there).  Window layers use the same absolute-slot layout as full
+# attention (no ring) — the window is enforced by the mask, so the existing
+# `causal_mask` / `_sdpa` kernels carry the paged path unchanged.
+
+
+def paged_cache_specs(c: AttnConfig, num_blocks: int, block_size: int):
+    """Pool ShapeDtypeStructs for one attention layer (shared across lanes)."""
+    if c.is_mla:
+        return {
+            "c_kv": sds((num_blocks, block_size, c.kv_lora_rank), c.dtype),
+            "k_rope": sds((num_blocks, block_size, c.rope_head_dim), c.dtype),
+        }
+    return {
+        "k": sds((num_blocks, block_size, c.num_kv_heads, c.head_dim), c.dtype),
+        "v": sds((num_blocks, block_size, c.num_kv_heads, c.head_dim), c.dtype),
+    }
+
+
+def _paged_gather(pool, tables):
+    """Gather a pool through block tables: (nb, bs, ...) x (B, MB) ->
+    (B, MB*bs, ...) — each lane's logical KV sequence, position-ordered."""
+    g = pool[tables]                                   # (B, MB, bs, ...)
+    return g.reshape(tables.shape[0], -1, *pool.shape[2:])
+
+
+def _paged_write_blocks(pool, table_row, start_pos, vals):
+    """Write `vals` (1, S, ...) at absolute positions [start_pos, start_pos+S)
+    of the lane whose table row is `table_row` (1, MB).  Requires start_pos
+    and S to be block-aligned (the engine pads prompts to chunk multiples,
+    chunks are block multiples), so writes are whole physical blocks."""
+    bs = pool.shape[1]
+    S = vals.shape[1]
+    ncb = S // bs
+    blk = jax.lax.dynamic_slice(table_row[0], (start_pos // bs,), (ncb,))
+    return pool.at[blk].set(vals[0].reshape(ncb, bs, *pool.shape[2:]))
+
+
+def _paged_write_token(pool, tables, positions, active, vals):
+    """Scatter one token per lane: vals (B, ...) at each lane's `positions`.
+    Inactive lanes are parked on null block 0 (their table lookup may be
+    stale), so one fixed-shape scatter serves any active subset."""
+    bs = pool.shape[1]
+    B = tables.shape[0]
+    blk = jnp.take_along_axis(tables, (positions // bs)[:, None], axis=1)[:, 0]
+    blk = jnp.where(active, blk, 0)
+    off = jnp.where(active, positions % bs, 0)
+    return pool.at[blk, off].set(vals)
+
+
+def paged_mask(positions, T: int, *, window: "int | None" = None):
+    """(B, 1, T) decode mask over a gathered pool: key slot j holds absolute
+    position j; valid iff j <= pos[lane] (and within `window`)."""
+    kpos = jnp.arange(T)[None, None, :]
+    pos = positions[:, None, None]
+    m = kpos <= pos
+    if window is not None:
+        m &= kpos > pos - window
+    return m
+
+
+def gqa_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
+    """One prefill chunk (B=1): project, write whole blocks, attend over the
+    gathered pool.  x: (1, S, D), start_pos: traced block-aligned scalar."""
+    S = x.shape[1]
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)[None]
+    q, k, v = gqa_project_qkv(p, c, x, positions)
+    kc = _paged_write_blocks(cache["k"], table_row, start_pos, k)
+    vc = _paged_write_blocks(cache["v"], table_row, start_pos, v)
+    kseq = _paged_gather(kc, table_row)
+    vseq = _paged_gather(vc, table_row)
+    mask = causal_mask(S, kseq.shape[1], start_pos, c.window)
+    out = _sdpa(q, kseq, vseq, mask, 1.0 / math.sqrt(c.head_dim))
+    return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
+            {"k": kc, "v": vc})
+
+
+def gqa_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
+    """One-token decode across lanes at heterogeneous positions.
+    x: (B, 1, D); tables: (B, MB); positions: (B,); active: (B,) bool."""
+    q, k, v = gqa_project_qkv(p, c, x, positions[:, None])
+    kc = _paged_write_token(cache["k"], tables, positions, active, k[:, 0])
+    vc = _paged_write_token(cache["v"], tables, positions, active, v[:, 0])
+    kseq = _paged_gather(kc, tables)
+    vseq = _paged_gather(vc, tables)
+    mask = paged_mask(positions, kseq.shape[1], window=c.window)
+    out = _sdpa(q, kseq, vseq, mask, 1.0 / math.sqrt(c.head_dim))
+    return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
+            {"k": kc, "v": vc})
+
+
+def mla_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
+    """MLA prefill chunk: the compressed latent (not full K/V) is what pages
+    through the pool — the paper's capacity argument compounded."""
+    S = x.shape[1]
+    positions = start_pos + jnp.arange(S, dtype=jnp.int32)[None]
+    q = _mla_q(p, c, x, positions)
+    c_kv, k_rope = _mla_latent(p, c, x, positions)
+    ckv = _paged_write_blocks(cache["c_kv"], table_row, start_pos, c_kv)
+    kr = _paged_write_blocks(cache["k_rope"], table_row, start_pos, k_rope)
+    ckv_seq = _paged_gather(ckv, table_row)
+    kr_seq = _paged_gather(kr, table_row)
+    mask = causal_mask(S, ckv_seq.shape[1], start_pos)
+    out = _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
+    return out, {"c_kv": ckv, "k_rope": kr}
+
+
+def mla_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
+    q = _mla_q(p, c, x, positions[:, None])
+    c_kv_new, k_rope_new = _mla_latent(p, c, x, positions[:, None])
+    ckv = _paged_write_token(cache["c_kv"], tables, positions, active,
+                             c_kv_new[:, 0])
+    kr = _paged_write_token(cache["k_rope"], tables, positions, active,
+                            k_rope_new[:, 0])
+    ckv_seq = _paged_gather(ckv, tables)
+    kr_seq = _paged_gather(kr, tables)
+    mask = paged_mask(positions, ckv_seq.shape[1])
+    out = _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
+    return out, {"c_kv": ckv, "k_rope": kr}
+
+
+# ---------------------------------------------------------------------------
 # MLA (multi-head latent attention)
 # ---------------------------------------------------------------------------
 

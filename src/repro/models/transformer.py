@@ -218,9 +218,7 @@ def forward(params: Pytree, cfg: ModelConfig, batch: dict,
             return_hidden: bool = False, act_pspec=None) -> jnp.ndarray:
     """Full-sequence forward to logits.  batch keys: tokens|embeds, [enc]."""
     if cfg.input_mode == "tokens":
-        x = embed(params["embed"], batch["tokens"])
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        x = _embed_tokens(params, cfg, batch["tokens"])
     else:
         x = batch["embeds"].astype(cfg.jdtype)
     # pin activation layout (batch over dp axes) — XLA otherwise may unshard
@@ -256,12 +254,9 @@ def forward(params: Pytree, cfg: ModelConfig, batch: dict,
             shard_specs=shard_specs, full_specs=full_specs,
         )
 
-    x = rmsnorm(params["final_norm"], x)
     if return_hidden:
-        return x
-    if cfg.tie_embeddings:
-        return unembed(params["embed"], x)
-    return lm_head(params["lm_head"], x)
+        return rmsnorm(params["final_norm"], x)
+    return _logits_head(params, cfg, x)
 
 
 def hidden_states(params: Pytree, cfg: ModelConfig, batch: dict,
@@ -390,13 +385,198 @@ def _block_decode(cfg, kind, p, x, cache, pos, enc):
     raise ValueError(kind)
 
 
+# ---------------------------------------------------------------------------
+# paged prefill / decode (serving subsystem)
+# ---------------------------------------------------------------------------
+#
+# The paged path serves attention-cache architectures (dense / shared_attn /
+# moe blocks, incl. window + MLA variants).  Recurrent blocks (mamba /
+# mlstm / slstm) carry O(1) state rather than per-token KV, and chunked
+# prefill of a *padded* prompt would push pad tokens through their state
+# update — they stay on the dense-cache engine (ROADMAP open item: masked
+# state updates would lift this).
+
+PAGED_BLOCK_KINDS = ("dense", "shared_attn", "moe")
+
+
+def is_stacked_cache_path(path) -> bool:
+    """True for cache-pytree leaves under the stacked "blocks" group, whose
+    leading dim is the superblock stack (so the lane/pool dim sits at axis 1,
+    not 0).  Single source of truth for every consumer that needs the
+    batch/pool axis of a cache leaf — the layout is defined by `cache_specs`
+    / `paged_cache_specs` in this module."""
+    return any(getattr(k, "key", None) == "blocks" for k in path)
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    kinds = tuple(cfg.prefix_pattern) + tuple(cfg.pattern)
+    return (cfg.input_mode == "tokens"
+            and all(k.split(":")[0] in PAGED_BLOCK_KINDS for k in kinds))
+
+
+def paged_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int) -> Pytree:
+    """Pool ShapeDtypeStructs mirroring `cache_specs`' tree structure, with
+    the per-lane (batch, max_len) dims replaced by shared
+    (num_blocks, block_size) pools.  Stacked superblock leaves keep their
+    leading S dim; physical block ids index the second axis there."""
+    if not supports_paged(cfg):
+        bad = [k for k in tuple(cfg.prefix_pattern) + tuple(cfg.pattern)
+               if k.split(":")[0] not in PAGED_BLOCK_KINDS]
+        raise ValueError(
+            f"{cfg.name}: paged KV serves attention-cache blocks only; "
+            f"unsupported kinds {bad} (use the dense-cache engine)")
+    S = cfg.num_superblocks
+    caches = {
+        "prefix": [
+            attn.paged_cache_specs(_attn_cfg(cfg, k), num_blocks, block_size)
+            for k in cfg.prefix_pattern
+        ],
+        "blocks": {},
+    }
+    for i, k in enumerate(cfg.pattern):
+        cs = attn.paged_cache_specs(_attn_cfg(cfg, k), num_blocks, block_size)
+        caches["blocks"][f"b{i}"] = jax.tree.map(
+            lambda s: sds((S, *s.shape), s.dtype), cs)
+    return caches
+
+
+def _block_prefill_paged(cfg, kind, p, x, cache, table_row, start_pos):
+    ac = _attn_cfg(cfg, kind)
+    base = kind.split(":")[0]
+    h = rmsnorm(p["ln1"], x)
+    if ac.is_mla:
+        h, cache = attn.mla_prefill_paged(p["attn"], ac, h, cache, table_row,
+                                          start_pos)
+    else:
+        h, cache = attn.gqa_prefill_paged(p["attn"], ac, h, cache, table_row,
+                                          start_pos)
+    x = x + h
+    h = rmsnorm(p["ln2"], x)
+    if base == "moe":
+        h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+    else:
+        h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
+    return x + h, cache
+
+
+def _block_decode_paged(cfg, kind, p, x, cache, tables, positions, active):
+    ac = _attn_cfg(cfg, kind)
+    base = kind.split(":")[0]
+    h = rmsnorm(p["ln1"], x)
+    if ac.is_mla:
+        h, cache = attn.mla_decode_paged(p["attn"], ac, h, cache, tables,
+                                         positions, active)
+    else:
+        h, cache = attn.gqa_decode_paged(p["attn"], ac, h, cache, tables,
+                                         positions, active)
+    x = x + h
+    h = rmsnorm(p["ln2"], x)
+    if base == "moe":
+        h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+    else:
+        h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
+    return x + h, cache
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    x = embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits_head(params, cfg: ModelConfig, x):
+    x = rmsnorm(params["final_norm"], x)
+    return (unembed(params["embed"], x) if cfg.tie_embeddings
+            else lm_head(params["lm_head"], x))
+
+
+def prefill_chunk(params: Pytree, cfg: ModelConfig, tokens, caches,
+                  table_row, start_pos, last_idx):
+    """Process one block-aligned prompt chunk for a single lane.
+
+    tokens: (1, chunk) — the chunk's token ids (pads beyond the real prompt
+      are harmless: their pool slots are overwritten by decode writes at the
+      same absolute positions, and the causal mask hides them until then).
+    table_row: (1, max_blocks) block table of the lane being prefilled.
+    start_pos: traced scalar — absolute position of tokens[0]; a chunk
+      multiple, hence block-aligned.
+    last_idx: traced scalar — chunk-local index whose logits the engine
+      samples from (the prompt's true last token on the final chunk; ignored
+      on earlier chunks).
+
+    Returns (logits (1, vocab), caches).  The chunk size is the ONLY shape
+    this function is compiled for — the generalized-ping-pong move applied
+    to prefill: a bursty whole-prompt rewrite becomes fixed-size chunks
+    interleaved with decode steps, so per-step token count (and HBM traffic)
+    stays flat and jit shapes are bounded.
+    """
+    x = _embed_tokens(params, cfg, tokens)
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c = _block_prefill_paged(cfg, kind, p, x, c, table_row, start_pos)
+        new_prefix.append(c)
+
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x = carry
+        ws, cache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
+            x, c_out = _block_prefill_paged(cfg, kind, p, x, cache[f"b{i}"],
+                                            table_row, start_pos)
+            new_caches[f"b{i}"] = c_out
+        return x, new_caches
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    logits = _logits_head(params, cfg, x_last)
+    return logits[:, 0], {"prefix": new_prefix, "blocks": blk_caches}
+
+
+def decode_step_paged(params: Pytree, cfg: ModelConfig, tokens, caches,
+                      tables, positions, active):
+    """One batched decode step over the paged pools.
+
+    tokens: (slots, 1); tables: (slots, max_blocks); positions: (slots,) —
+    PER-LANE absolute positions, so heterogeneous lanes decode in ONE call
+    (the seed engine ran one call per distinct position); active: (slots,)
+    bool — inactive lanes write to the null block and their logits are
+    garbage the engine ignores.
+
+    Returns (logits (slots, 1, vocab), caches).
+    """
+    x = _embed_tokens(params, cfg, tokens)
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c = _block_decode_paged(cfg, kind, p, x, c, tables, positions, active)
+        new_prefix.append(c)
+
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x = carry
+        ws, cache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
+            x, c_out = _block_decode_paged(cfg, kind, p, x, cache[f"b{i}"],
+                                           tables, positions, active)
+            new_caches[f"b{i}"] = c_out
+        return x, new_caches
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    logits = _logits_head(params, cfg, x)
+    return logits, {"prefix": new_prefix, "blocks": blk_caches}
+
+
 def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int,
             mesh=None, act_pspec=None):
     """Process the prompt; returns (last-position logits, caches)."""
     if cfg.input_mode == "tokens":
-        x = embed(params["embed"], batch["tokens"])
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        x = _embed_tokens(params, cfg, batch["tokens"])
     else:
         x = batch["embeds"].astype(cfg.jdtype)
     x = _wsc(x, act_pspec, mesh)
@@ -426,9 +606,7 @@ def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int,
     x, blk_caches = jax.lax.scan(body, x, params["blocks"])
     caches["blocks"] = blk_caches
 
-    x = rmsnorm(params["final_norm"], x[:, -1:])
-    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
-              else lm_head(params["lm_head"], x))
+    logits = _logits_head(params, cfg, x[:, -1:])
     return logits, caches
 
 
@@ -437,9 +615,7 @@ def decode_step(params: Pytree, cfg: ModelConfig, tokens_or_embeds, caches, pos,
     """One decode step.  tokens: (B, 1) ints (or (B,1,D) embeds).  pos: traced
     scalar — absolute position of the new token."""
     if cfg.input_mode == "tokens":
-        x = embed(params["embed"], tokens_or_embeds)
-        if cfg.embed_scale:
-            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        x = _embed_tokens(params, cfg, tokens_or_embeds)
     else:
         x = tokens_or_embeds.astype(cfg.jdtype)
     if enc is not None:
@@ -466,7 +642,5 @@ def decode_step(params: Pytree, cfg: ModelConfig, tokens_or_embeds, caches, pos,
 
     x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
 
-    x = rmsnorm(params["final_norm"], x)
-    logits = (unembed(params["embed"], x) if cfg.tie_embeddings
-              else lm_head(params["lm_head"], x))
+    logits = _logits_head(params, cfg, x)
     return logits, {"prefix": new_prefix, "blocks": blk_caches}

@@ -1,3 +1,39 @@
-from repro.serving.engine import ServeConfig, ServingEngine
+"""Serving subsystem: paged KV cache + chunked-prefill continuous batching.
 
-__all__ = ["ServeConfig", "ServingEngine"]
+The paper's generalized ping-pong (GPP) takes a bursty off-chip phase — the
+PIM weight rewrite — and chunks it so its traffic is spread evenly across
+compute steps, keeping off-chip bandwidth demand flat and every macro busy.
+This package is that strategy transplanted onto LLM serving, where
+whole-prompt prefill is the burst and decode steps are the compute slots:
+
+  paper concept                  serving analogue
+  ----------------------------   ------------------------------------------
+  PIM macro                      physical KV block in the shared pool
+  macro assignment               per-lane block table (cache.PagedKVCache)
+  weight rewrite (the burst)     whole-prompt prefill
+  rewrite chunk (1/C of a tile)  one fixed-size prefill chunk
+  compute slot                   one batched decode step across lanes
+  flat off-chip bandwidth        flat tokens/step => flat HBM bytes/step
+  G-deep ring never starving     decode lanes never stall behind a prefill
+  runtime adaptation (Fig 7)     preemption by block pressure + resume
+
+Modules:
+  cache.py      fixed-size-block paged KV cache: allocator, per-lane block
+                tables, defragmentation; capacity is `num_blocks`, shared,
+                not `slots x max_len` reserved per lane
+  scheduler.py  token-budget continuous-batching scheduler: FCFS admission,
+                prefill split into chunks interleaved with decode,
+                preemption-by-block-pressure with recompute resume
+  engine.py     ServingEngine — composes the two; exactly two jitted step
+                shapes (chunked-prefill and pure-decode); per-step metrics
+  dense_engine.py  the seed dense-cache engine, kept as the recurrent-arch
+                fallback and the benchmark/parity baseline
+
+`make_engine` picks the right engine for an architecture; the chunk size
+comes from `core.schedule.plan_serve_chunk`, the same flatness math that
+sizes the kernels' DMA rings.
+"""
+from repro.serving.dense_engine import DenseServingEngine
+from repro.serving.engine import ServeConfig, ServingEngine, make_engine
+
+__all__ = ["DenseServingEngine", "ServeConfig", "ServingEngine", "make_engine"]

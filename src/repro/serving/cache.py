@@ -1,0 +1,174 @@
+"""Paged KV cache: fixed-size blocks + per-lane block tables over shared pools.
+
+The serving analogue of the paper's macro pool: physical KV blocks are the
+"macros", a lane's block table is its schedule slot assignment, and capacity
+is `num_blocks * block_size` tokens shared across every lane — not
+`slots * max_len` reserved per lane as in the dense seed cache.  A lane
+holding a 6-token prompt pins one 16-token block, not a whole `max_len` row.
+
+Layout contract (consumed by `models.attention` paged read/write and
+`models.transformer.prefill_chunk` / `decode_step_paged`):
+
+  * physical block 0 is RESERVED as a null/scratch block: unmapped table
+    entries read it (masked out by the causal mask) and inactive decode
+    lanes write into it, so the jitted step functions never branch on
+    occupancy.
+  * a lane's logical block `b` holds absolute positions
+    `[b*block_size, (b+1)*block_size)`; table entry `tables[lane, b]` is the
+    physical block id (0 while unmapped).
+
+This module is pure host-side bookkeeping (numpy tables + a free list); the
+device-side pools live in the engine's cache pytree and are permuted by the
+engine when `defragment` hands back a physical-block permutation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class BlockAllocator:
+    """Free-list allocator over physical blocks 1..num_blocks-1 (0 reserved).
+
+    Allocation is all-or-nothing: a request for `n` blocks either returns
+    `n` ids or None, so callers can fall back to preemption atomically.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the reserved null block)")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently-freed blocks are re-used first (warm)
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable blocks (excludes the reserved null block)."""
+        return self.num_blocks - 1
+
+    def allocate(self, n: int) -> "list[int] | None":
+        if n < 0:
+            raise ValueError("n >= 0")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, blocks: "list[int]") -> None:
+        for b in blocks:
+            if not 1 <= b < self.num_blocks:
+                raise ValueError(f"bad block id {b}")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+        self._free.extend(blocks)
+
+    def reset_free(self, free: "list[int]") -> None:
+        """Replace the free list (defragment rebuilds it compactly)."""
+        self._free = list(free)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    num_blocks: int          # physical blocks INCLUDING reserved block 0
+    block_size: int          # tokens per block
+    max_blocks_per_seq: int  # block-table width: max_len // block_size
+
+    @property
+    def max_len(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+    @property
+    def token_capacity(self) -> int:
+        """Tokens the pool can hold across all lanes (null block excluded)."""
+        return (self.num_blocks - 1) * self.block_size
+
+
+class PagedKVCache:
+    """Block tables + allocator for `slots` lanes over one shared pool.
+
+    Pools themselves (one per attention layer) live in the engine's cache
+    pytree; this object owns which physical block backs which (lane,
+    logical-block) coordinate.
+    """
+
+    def __init__(self, *, slots: int, num_blocks: int, block_size: int,
+                 max_blocks_per_seq: int):
+        self.cfg = PagedCacheConfig(num_blocks, block_size, max_blocks_per_seq)
+        self.slots = slots
+        self.allocator = BlockAllocator(num_blocks)
+        self.tables = np.zeros((slots, max_blocks_per_seq), np.int32)
+        self.num_mapped = np.zeros((slots,), np.int64)  # logical blocks mapped
+
+    # ------------------------------------------------------------ queries
+    @property
+    def blocks_in_use(self) -> int:
+        return self.allocator.capacity - self.allocator.num_free
+
+    @property
+    def num_free(self) -> int:
+        return self.allocator.num_free
+
+    def blocks_for(self, lane: int) -> "list[int]":
+        return self.tables[lane, : self.num_mapped[lane]].tolist()
+
+    def blocks_needed(self, lane: int, upto_pos: int) -> int:
+        """Additional blocks lane needs so position `upto_pos` is backed."""
+        want = upto_pos // self.cfg.block_size + 1
+        return max(0, want - int(self.num_mapped[lane]))
+
+    # --------------------------------------------------------- mutations
+    def ensure(self, lane: int, upto_pos: int) -> bool:
+        """Map blocks so `upto_pos` is writable.  False if the pool is out
+        of free blocks (caller decides whether to preempt)."""
+        need = self.blocks_needed(lane, upto_pos)
+        if need == 0:
+            return True
+        have = int(self.num_mapped[lane])
+        if have + need > self.cfg.max_blocks_per_seq:
+            raise ValueError(
+                f"lane {lane}: position {upto_pos} exceeds the "
+                f"{self.cfg.max_len}-token block table")
+        blocks = self.allocator.allocate(need)
+        if blocks is None:
+            return False
+        self.tables[lane, have : have + need] = blocks
+        self.num_mapped[lane] = have + need
+        return True
+
+    def free_lane(self, lane: int) -> None:
+        n = int(self.num_mapped[lane])
+        if n:
+            self.allocator.free(self.tables[lane, :n].tolist())
+        self.tables[lane, :] = 0
+        self.num_mapped[lane] = 0
+
+    def defragment(self) -> np.ndarray:
+        """Compact live blocks to the low end of the pool.
+
+        Returns `perm` (shape (num_blocks,), int32) with
+        `new_pool[i] = old_pool[perm[i]]` — the engine applies it to every
+        device pool; tables and the free list are rewritten here so the
+        compacted ids are contiguous (gathers touch one dense pool prefix,
+        the locality the GPP streaming schedule wants).
+        """
+        nb = self.cfg.num_blocks
+        live: list[int] = [0]                        # null block stays put
+        for lane in range(self.slots):
+            live.extend(self.tables[lane, : self.num_mapped[lane]].tolist())
+        live_set = set(live)
+        dead = [b for b in range(nb) if b not in live_set]
+        perm = np.asarray(live + dead, np.int32)
+        assert perm.shape == (nb,)
+        old_to_new = np.empty(nb, np.int64)
+        old_to_new[perm] = np.arange(nb)
+        for lane in range(self.slots):
+            n = int(self.num_mapped[lane])
+            if n:
+                self.tables[lane, :n] = old_to_new[self.tables[lane, :n]]
+        self.allocator.reset_free(list(range(nb - 1, len(live) - 1, -1)))
+        return perm

@@ -1,0 +1,193 @@
+"""Dense-cache serving engine (the pre-paged seed design), kept as
+
+  * the fallback for recurrent architectures (mamba/xlstm blocks carry O(1)
+    state, not paged KV — chunked prefill of padded prompts would push pad
+    tokens through their state update);
+  * the baseline the paged engine's parity tests and BENCH_serving.json
+    benchmarks compare against.
+
+Design (seed): `slots` decode lanes over a dense `(slots, max_len)` cache;
+finished lanes are refilled from the queue by re-running whole-prompt
+prefill (one jit trace PER DISTINCT PROMPT LENGTH) and decode runs one call
+per distinct lane position — both the bursty anti-patterns the paged engine
+(`serving.engine.ServingEngine`) removes.
+
+Per-step token counts are recorded into `self.metrics` so the serving
+benchmark can report this engine's burstiness (tokens/step CoV) next to the
+paged engine's flat schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.schedule import tokens_per_step_cov
+from repro.models import transformer as tf
+from repro.serving.engine import ServeConfig, sample_token
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class _Lane:
+    request_id: int | None = None
+    pos: int = 0
+    remaining: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class DenseServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig):
+        if serve.dense_kernel is not None:
+            cfg = cfg.with_(dense_kernel=serve.dense_kernel)
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve
+        self.lanes = [_Lane() for _ in range(serve.slots)]
+        self._queue: list[tuple[int, np.ndarray, int]] = []
+        self._results: dict[int, list[int]] = {}
+        self._next_id = 0
+        self.metrics: list[dict] = []
+        self.trace_counts = {"prefill": 0, "decode": 0}
+
+        def _prefill_one(params, tokens):
+            self.trace_counts["prefill"] += 1
+            batch = {"tokens": tokens}
+            return tf.prefill(params, cfg, batch, max_len=serve.max_len)
+
+        def _decode(params, toks, caches, pos_scalar):
+            self.trace_counts["decode"] += 1
+            return tf.decode_step(params, cfg, toks, caches, pos_scalar)
+
+        self._prefill = jax.jit(_prefill_one)
+        self._decode = jax.jit(_decode)
+        self.caches = None
+
+    # ---------------------------------------------------------------- API
+    def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, np.asarray(prompt, np.int32), max_new_tokens))
+        return rid
+
+    def result(self, rid: int) -> list[int] | None:
+        return self._results.get(rid)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + sum(1 for l in self.lanes if l.request_id is not None)
+
+    def flatness_cov(self) -> float:
+        """Coefficient of variation of tokens/step (prefill bursts make the
+        dense engine's high; the paged engine's is the flat comparison)."""
+        return tokens_per_step_cov([m["tokens"] for m in self.metrics])
+
+    # ------------------------------------------------------------ engine
+    def _admit(self) -> int:
+        """Fill idle lanes from the queue (continuous batching).  Returns
+        prefill tokens processed (whole prompts — the bursty phase)."""
+        prefill_tokens = 0
+        for i, lane in enumerate(self.lanes):
+            if lane.request_id is not None or not self._queue:
+                continue
+            rid, prompt, max_new = self._queue.pop(0)
+            logits, caches = self._prefill(self.params, prompt[None, :])
+            prefill_tokens += len(prompt)
+            first = sample_token(self.serve, rid, 0, logits[0, -1])
+            if max_new <= 1 or (self.serve.eos_token is not None
+                                and first == self.serve.eos_token):
+                # finished on the prefill-sampled token: never occupies a
+                # lane (matches the paged engine's _maybe_finish semantics)
+                self._results[rid] = [first]
+                continue
+            # batch dim is 1 for stacked ("blocks") cache leaves, 0 otherwise
+            def bdim(path):
+                return 1 if tf.is_stacked_cache_path(path) else 0
+            if self.caches is None:
+                # materialize an empty slot-pool cache from this prototype
+                def pool(path, c):
+                    d = bdim(path)
+                    shape = list(c.shape)
+                    shape[d] = self.serve.slots
+                    return jnp.zeros(shape, c.dtype)
+                self.caches = jax.tree_util.tree_map_with_path(pool, caches)
+            # write this lane's cache slice
+            def write(path, pool, c):
+                return jax.lax.dynamic_update_slice_in_dim(pool, c, i, bdim(path))
+            self.caches = jax.tree_util.tree_map_with_path(
+                write, self.caches, caches)
+            lane.request_id = rid
+            lane.pos = len(prompt)
+            lane.remaining = max_new - 1
+            lane.tokens = [first]
+        return prefill_tokens
+
+    def step(self):
+        """One batched decode step across all active lanes."""
+        prefill_tokens = self._admit()
+        active = [l for l in self.lanes if l.request_id is not None]
+        if not active:
+            return False
+        toks = np.zeros((self.serve.slots, 1), np.int32)
+        for i, lane in enumerate(self.lanes):
+            if lane.request_id is not None and lane.tokens:
+                toks[i, 0] = lane.tokens[-1]
+        # single shared pos isn't valid for heterogeneous lanes, so we run
+        # one decode call per unique pos group — and merge back ONLY the
+        # group's cache rows: decode_step writes KV at `pos` (and advances
+        # recurrent state) for EVERY batch row, which would clobber
+        # out-of-group lanes' history at that position.  (The paged engine
+        # avoids all of this with per-lane position vectors.)
+        pos_groups: dict[int, list[int]] = {}
+        for i, lane in enumerate(self.lanes):
+            if lane.request_id is not None:
+                pos_groups.setdefault(lane.pos, []).append(i)
+        decode_tokens = 0
+        for pos, lanes_at in pos_groups.items():
+            logits, new_caches = self._decode(
+                self.params, jnp.asarray(toks), self.caches, pos)
+            in_group = np.zeros((self.serve.slots,), bool)
+            in_group[lanes_at] = True
+
+            def merge(path, old, new):
+                d = 1 if tf.is_stacked_cache_path(path) else 0
+                mask = jnp.asarray(in_group).reshape(
+                    (1,) * d + (-1,) + (1,) * (old.ndim - d - 1))
+                return jnp.where(mask, new, old)
+
+            self.caches = jax.tree_util.tree_map_with_path(
+                merge, self.caches, new_caches)
+            for i in lanes_at:
+                lane = self.lanes[i]
+                nxt = sample_token(self.serve, lane.request_id,
+                                   len(lane.tokens), logits[i, -1])
+                lane.tokens.append(nxt)
+                lane.pos += 1
+                lane.remaining -= 1
+                decode_tokens += 1
+                done = lane.remaining <= 0 or (
+                    self.serve.eos_token is not None and nxt == self.serve.eos_token)
+                if done:
+                    self._results[lane.request_id] = lane.tokens
+                    self.lanes[i] = _Lane()
+        self.metrics.append({
+            "step": len(self.metrics),
+            "tokens": prefill_tokens + decode_tokens,
+            "prefill_tokens": prefill_tokens,
+            "decode_tokens": decode_tokens,
+            "queue_depth": len(self._queue),
+        })
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while self.pending and steps < max_steps:
+            self.step()
+            steps += 1
+        return self._results

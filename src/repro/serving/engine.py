@@ -1,15 +1,30 @@
-"""Batched serving engine: continuous-batching decode over a fixed slot pool.
+"""Paged-KV serving engine: chunked prefill + continuous batching decode.
 
-A request = prompt tokens + max_new_tokens.  The engine keeps `slots` decode
-lanes; finished lanes are refilled from the queue (continuous batching) by
-re-running prefill for the incoming prompt into the lane's cache slice.
-Per-lane `pos` drives the causal masks, so lanes at different generation
-depths coexist in one batched decode_step — the serving analogue of the
-paper's point: keep every "macro" (lane) busy instead of barriering on the
-slowest.
+Composes `serving.cache.PagedKVCache` (fixed-size KV blocks shared across
+lanes, per-lane block tables) with `serving.scheduler.ChunkedPrefillScheduler`
+(FCFS + preemption-by-block-pressure, prefill split into fixed chunks and
+interleaved with decode — the generalized-ping-pong schedule applied to the
+request stream, so per-step token count and HBM traffic stay flat).
 
-Decode is greedy (argmax) by default with optional temperature sampling.
-All steps are jit-compiled once per (slots, max_len) shape.
+Exactly TWO step shapes are jit-compiled, independent of prompt lengths:
+
+  * `prefill_chunk`: (1, chunk) tokens — one chunk of one lane's (padded)
+    prompt, writing whole KV blocks through the lane's block table;
+  * `decode_step_paged`: (slots, 1) tokens with PER-LANE position vectors —
+    heterogeneous lanes decode in one call (the seed engine ran one call per
+    distinct position and re-traced per prompt length).
+
+Sampling is deterministic: greedy by default; with temperature > 0 every
+token draw uses a key folded from (ServeConfig.seed, request id, token
+index), so identical request streams reproduce identical outputs regardless
+of lane assignment, step interleaving, or preemption/resume.
+
+Per-step metrics (tokens, blocks in use, queue depth, projected HBM bytes)
+accumulate in `engine.metrics`; `benchmarks/run.py` records them into
+BENCH_serving.json.
+
+Recurrent architectures (mamba/xlstm blocks: O(1) state, no paged KV) are
+served by `serving.dense_engine.DenseServingEngine` — see `make_engine`.
 """
 from __future__ import annotations
 
@@ -22,7 +37,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.schedule import plan_serve_chunk, round_up, tokens_per_step_cov
 from repro.models import transformer as tf
+from repro.serving.cache import PagedKVCache
+from repro.serving.scheduler import ChunkedPrefillScheduler, Request
 
 Pytree = Any
 
@@ -30,125 +48,235 @@ Pytree = Any
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     slots: int = 4                 # concurrent decode lanes
-    max_len: int = 256             # cache capacity per lane
+    max_len: int = 256             # max tokens per sequence (table capacity)
     temperature: float = 0.0       # 0 => greedy
     eos_token: int | None = None
     dense_kernel: str | None = None  # override cfg.dense_kernel at serve time;
                                      # threads through prefill AND decode, so
-                                     # "kernel" streams every projection (attn
-                                     # q/k/v/o, MLA, MoE experts, SSM/xLSTM)
-                                     # through the GPP Pallas matmul instead
-                                     # of the reference path at large shapes
+                                     # "kernel" streams every projection
+                                     # through the GPP Pallas matmul
+    seed: int = 0                  # PRNG root for temperature sampling;
+                                   # per-token keys fold in (rid, token_idx)
+    # paged-KV knobs (0 = derive from the ModelConfig serving defaults)
+    block_size: int = 0            # tokens per KV block
+    num_blocks: int = 0            # pool size incl. reserved null block 0;
+                                   # 0 = slots*max_len worth (the dense
+                                   # engine's footprint, now SHARED)
+    prefill_chunk: int = 0         # tokens per prefill chunk; 0 = planned by
+                                   # core.schedule.plan_serve_chunk
+    token_budget: int = 0          # flat per-step token target; 0 = cfg /
+                                   # slots + 2 blocks
 
 
-@dataclasses.dataclass
-class _Lane:
-    request_id: int | None = None
-    pos: int = 0
-    remaining: int = 0
-    tokens: list = dataclasses.field(default_factory=list)
+def sample_token(serve: ServeConfig, rid: int, token_idx: int,
+                 logits_row) -> int:
+    """Deterministic sampling shared by both engines: greedy at
+    temperature 0, otherwise a categorical draw keyed on
+    (serve.seed, rid, token_idx) — no shared/implicit PRNG state, so
+    identical request streams reproduce identical outputs regardless of
+    lane assignment, batching, or preemption/resume."""
+    if serve.temperature <= 0.0:
+        return int(np.argmax(np.asarray(logits_row, np.float32)))
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(serve.seed), rid), token_idx)
+    scaled = jnp.asarray(logits_row, jnp.float32) / serve.temperature
+    return int(jax.random.categorical(key, scaled))
 
 
 class ServingEngine:
+    """Paged-KV continuous-batching engine (see module docstring)."""
+
     def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig):
         if serve.dense_kernel is not None:
             cfg = cfg.with_(dense_kernel=serve.dense_kernel)
+        if not tf.supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name} has recurrent/cross blocks; paged serving "
+                "covers attention-cache models — use DenseServingEngine "
+                "(serving.make_engine picks automatically)")
         self.cfg = cfg
         self.params = params
         self.serve = serve
-        self.lanes = [_Lane() for _ in range(serve.slots)]
-        self._queue: list[tuple[int, np.ndarray, int]] = []
+
+        bs = serve.block_size or cfg.serve_block_size
+        max_len = round_up(serve.max_len, bs)
+        mb = max_len // bs
+        budget = serve.token_budget or cfg.serve_token_budget \
+            or (serve.slots + 2 * bs)
+        chunk = serve.prefill_chunk or plan_serve_chunk(
+            token_budget=budget, decode_lanes=serve.slots, block_size=bs)
+        num_blocks = serve.num_blocks or serve.slots * mb + 1
+        self.block_size = bs
+        self.chunk = chunk
+        self.token_budget = budget
+
+        self.kv = PagedKVCache(slots=serve.slots, num_blocks=num_blocks,
+                               block_size=bs, max_blocks_per_seq=mb)
+        self.scheduler = ChunkedPrefillScheduler(
+            self.kv, slots=serve.slots, chunk=chunk)
+        specs = tf.paged_cache_specs(cfg, num_blocks, bs)
+        self.caches = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._kv_token_bytes = self._kv_bytes_per_token(specs)
+        self._param_bytes = cfg.active_params() * cfg.jdtype.itemsize
+
+        # trace_counts increments when jax TRACES (= compiles) a step fn —
+        # the re-jit regression tests assert it stays at {1, 1} across
+        # arbitrary prompt-length mixes.
+        self.trace_counts = {"prefill_chunk": 0, "decode": 0}
+
+        def _prefill(params, caches, toks, table_row, start_pos, last_idx):
+            self.trace_counts["prefill_chunk"] += 1
+            return tf.prefill_chunk(params, cfg, toks, caches, table_row,
+                                    start_pos, last_idx)
+
+        def _decode(params, caches, toks, tables, positions, active):
+            self.trace_counts["decode"] += 1
+            return tf.decode_step_paged(params, cfg, toks, caches, tables,
+                                        positions, active)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
         self._results: dict[int, list[int]] = {}
         self._next_id = 0
+        self.metrics: list[dict] = []
 
-        def _prefill_one(params, tokens):
-            batch = {"tokens": tokens}
-            return tf.prefill(params, cfg, batch, max_len=serve.max_len)
+    @staticmethod
+    def _kv_bytes_per_token(specs) -> int:
+        """Per-token KV bytes across every attention layer (stacked block
+        leaves carry a leading superblock dim before (nb, bs, ...))."""
+        total = 0
 
-        def _decode(params, toks, caches, pos_scalar):
-            return tf.decode_step(params, cfg, toks, caches, pos_scalar)
+        def leaf(path, s):
+            nonlocal total
+            stacked = tf.is_stacked_cache_path(path)
+            per_slot = int(np.prod(s.shape[3:] if stacked else s.shape[2:]))
+            layers = s.shape[0] if stacked else 1
+            total += layers * per_slot * jnp.dtype(s.dtype).itemsize
 
-        self._prefill = jax.jit(_prefill_one)
-        self._decode = jax.jit(_decode)
-        self.caches = None
+        jax.tree_util.tree_map_with_path(leaf, specs)
+        return total
 
     # ---------------------------------------------------------------- API
-    def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: "list[int]", max_new_tokens: int = 32) -> int:
         rid = self._next_id
         self._next_id += 1
-        self._queue.append((rid, np.asarray(prompt, np.int32), max_new_tokens))
+        self.scheduler.submit(Request(
+            rid=rid, prompt=np.asarray(prompt, np.int32),
+            max_new=max_new_tokens))
         return rid
 
-    def result(self, rid: int) -> list[int] | None:
+    def result(self, rid: int) -> "list[int] | None":
         return self._results.get(rid)
 
     @property
     def pending(self) -> int:
-        return len(self._queue) + sum(1 for l in self.lanes if l.request_id is not None)
+        return self.scheduler.pending
+
+    def flatness_cov(self) -> float:
+        """Coefficient of variation of tokens/step (lower = flatter)."""
+        return tokens_per_step_cov([m["tokens"] for m in self.metrics])
 
     # ------------------------------------------------------------ engine
-    def _admit(self):
-        """Fill idle lanes from the queue (continuous batching)."""
-        for i, lane in enumerate(self.lanes):
-            if lane.request_id is not None or not self._queue:
-                continue
-            rid, prompt, max_new = self._queue.pop(0)
-            logits, caches = self._prefill(self.params, prompt[None, :])
-            first = int(jnp.argmax(logits[0, -1]))
-            # batch dim is 1 for stacked ("blocks") cache leaves, 0 otherwise
-            def bdim(path):
-                return 1 if any(getattr(k, "key", None) == "blocks"
-                                for k in path) else 0
-            if self.caches is None:
-                # materialize an empty slot-pool cache from this prototype
-                def pool(path, c):
-                    d = bdim(path)
-                    shape = list(c.shape)
-                    shape[d] = self.serve.slots
-                    return jnp.zeros(shape, c.dtype)
-                self.caches = jax.tree_util.tree_map_with_path(pool, caches)
-            # write this lane's cache slice
-            def write(path, pool, c):
-                return jax.lax.dynamic_update_slice_in_dim(pool, c, i, bdim(path))
-            self.caches = jax.tree_util.tree_map_with_path(
-                write, self.caches, caches)
-            lane.request_id = rid
-            lane.pos = len(prompt)
-            lane.remaining = max_new - 1
-            lane.tokens = [first]
+    def _sample(self, logits_row, req: Request) -> int:
+        return sample_token(self.serve, req.rid, len(req.produced), logits_row)
 
-    def step(self):
-        """One batched decode step across all active lanes."""
-        self._admit()
-        active = [l for l in self.lanes if l.request_id is not None]
-        if not active:
+    def _maybe_finish(self, lane: int, tok: int) -> None:
+        req = self.scheduler.request_at(lane)
+        done = req.remaining <= 0 or (
+            self.serve.eos_token is not None and tok == self.serve.eos_token)
+        if done:
+            self._results[req.rid] = list(req.produced)
+            self.scheduler.finish(lane)
+
+    def step(self) -> bool:
+        """One engine step: at most one prefill chunk + one batched decode
+        call over every decode-phase lane."""
+        plan = self.scheduler.schedule()
+        if plan is None:
+            if self.scheduler.pending:
+                raise RuntimeError(
+                    "paged pool cannot back even the oldest request "
+                    f"({self.kv.cfg.num_blocks} blocks of {self.block_size}); "
+                    "raise ServeConfig.num_blocks")
             return False
-        toks = np.zeros((self.serve.slots, 1), np.int32)
-        for i, lane in enumerate(self.lanes):
-            if lane.request_id is not None and lane.tokens:
-                toks[i, 0] = lane.tokens[-1]
-        # single shared pos isn't valid for heterogeneous lanes; decode per
-        # max pos is conservative — we run one step per unique pos group.
-        # (simple and correct; production would use per-lane position vectors)
-        pos_groups: dict[int, list[int]] = {}
-        for i, lane in enumerate(self.lanes):
-            if lane.request_id is not None:
-                pos_groups.setdefault(lane.pos, []).append(i)
-        for pos, lanes_at in pos_groups.items():
+        prefill_tokens = decode_tokens = 0
+        read_tokens = 0
+
+        if plan.prefill:
+            w = plan.prefill
+            req = self.scheduler.request_at(w.lane)
+            logits, self.caches = self._prefill(
+                self.params, self.caches,
+                jnp.asarray(w.tokens[None]),
+                jnp.asarray(self.kv.tables[w.lane][None]),
+                w.start_pos, w.last_idx)
+            prefill_tokens = len(w.tokens)
+            read_tokens += w.start_pos + len(w.tokens)
+            if w.final:
+                tok = self._sample(logits[0], req)
+                req.produced.append(tok)
+                self.scheduler.to_decode(w.lane)
+                self._maybe_finish(w.lane, tok)
+
+        if plan.decode_lanes:
+            slots = self.serve.slots
+            toks = np.zeros((slots, 1), np.int32)
+            positions = np.zeros((slots,), np.int32)
+            active = np.zeros((slots,), bool)
+            for lane in plan.decode_lanes:
+                req = self.scheduler.request_at(lane)
+                toks[lane, 0] = req.produced[-1]
+                positions[lane] = req.decode_pos
+                active[lane] = True
+                read_tokens += req.decode_pos + 1
             logits, self.caches = self._decode(
-                self.params, jnp.asarray(toks), self.caches, pos)
-            for i in lanes_at:
-                lane = self.lanes[i]
-                nxt = int(jnp.argmax(logits[i, -1]))
-                lane.tokens.append(nxt)
-                lane.pos += 1
-                lane.remaining -= 1
-                done = lane.remaining <= 0 or (
-                    self.serve.eos_token is not None and nxt == self.serve.eos_token)
-                if done:
-                    self._results[lane.request_id] = lane.tokens
-                    self.lanes[i] = _Lane()
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(self.kv.tables), jnp.asarray(positions),
+                jnp.asarray(active))
+            logits_np = np.asarray(logits, np.float32)
+            for lane in plan.decode_lanes:
+                req = self.scheduler.request_at(lane)
+                req.decode_pos += 1
+                tok = self._sample(logits_np[lane, 0], req)
+                req.produced.append(tok)
+                self._maybe_finish(lane, tok)
+            decode_tokens = len(plan.decode_lanes)
+
+        tokens = prefill_tokens + decode_tokens
+        self.metrics.append({
+            "step": len(self.metrics),
+            "tokens": tokens,
+            "prefill_tokens": prefill_tokens,
+            # non-pad prompt tokens in the chunk (<= prefill_tokens; the
+            # padded count is the flatness/traffic quantity)
+            "prefill_real_tokens": (plan.prefill.real_tokens
+                                    if plan.prefill else 0),
+            "decode_tokens": decode_tokens,
+            "blocks_in_use": self.kv.blocks_in_use,
+            "free_blocks": self.kv.num_free,
+            "queue_depth": self.scheduler.queue_depth,
+            "preempted": len(plan.preempted),
+            # projection: weights stream once per step; every processed token
+            # writes its KV; reads cover each participant's live prefix
+            "hbm_bytes": (self._param_bytes
+                          + tokens * self._kv_token_bytes
+                          + read_tokens * self._kv_token_bytes),
+        })
         return True
+
+    def defragment(self) -> None:
+        """Compact the physical pool (gathers then touch one dense prefix);
+        pools are permuted in lockstep with the tables."""
+        perm = self.kv.defragment()
+        jperm = jnp.asarray(perm)
+
+        def apply(path, pool):
+            return (pool[:, jperm] if tf.is_stacked_cache_path(path)
+                    else pool[jperm])
+
+        self.caches = jax.tree_util.tree_map_with_path(apply, self.caches)
 
     def run(self, max_steps: int = 10_000):
         steps = 0
@@ -156,3 +284,13 @@ class ServingEngine:
             self.step()
             steps += 1
         return self._results
+
+
+def make_engine(cfg: ModelConfig, params: Pytree, serve: ServeConfig):
+    """Paged engine when the architecture supports it, dense-cache fallback
+    (recurrent/cross blocks) otherwise."""
+    if tf.supports_paged(cfg if serve.dense_kernel is None
+                         else cfg.with_(dense_kernel=serve.dense_kernel)):
+        return ServingEngine(cfg, params, serve)
+    from repro.serving.dense_engine import DenseServingEngine
+    return DenseServingEngine(cfg, params, serve)

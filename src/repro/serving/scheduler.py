@@ -1,0 +1,228 @@
+"""Token-budget continuous-batching scheduler with GPP-style chunked prefill.
+
+The paper's problem: a bursty off-chip phase (weight rewrite) alternating
+with compute starves the bus, so GPP splits the burst into chunks and issues
+one chunk per compute slot — traffic goes flat.  Serving has the same
+anti-pattern on the *request* axis: whole-prompt prefill is the burst, decode
+steps are the compute slots.  This scheduler applies the same move:
+
+  * prefill is split into fixed-size chunks (a multiple of the KV block
+    size) and AT MOST ONE chunk runs per engine step, interleaved with the
+    batched decode of every decode-phase lane — per-step token count (and
+    hence per-step HBM traffic: weights stream once per step, KV writes are
+    proportional to tokens) stays flat at ~`chunk + decode_lanes` instead of
+    alternating `len(prompt)` spikes with single-token trickles;
+  * one chunk size means ONE compiled prefill shape and one decode shape —
+    the engine never re-jits per prompt length.
+
+Policies:
+  * FCFS admission: the waiting queue is served strictly in submission
+    order; a free lane always takes the queue head.
+  * Preemption by block pressure: when the shared block pool runs dry, the
+    YOUNGEST running request is preempted (recompute-style: its blocks are
+    freed and it re-queues at the front with its generated tokens carried,
+    to be re-prefilled on resume).  Victims are strictly younger than the
+    requester, so the oldest request always makes progress — no starvation.
+
+Pure host-side logic (no jax): unit-testable without a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.schedule import round_up
+from repro.serving.cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (plen,) int32
+    max_new: int
+    # mutable progress state -------------------------------------------------
+    produced: list = dataclasses.field(default_factory=list)  # generated ids
+    lane: int = -1
+    context: "np.ndarray | None" = None  # tokens being (re-)prefilled
+    prefill_pos: int = 0                 # next un-prefilled position
+    decode_pos: int = -1                 # next KV write position in decode
+    preemptions: int = 0
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.produced)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillWork:
+    lane: int
+    rid: int
+    tokens: np.ndarray   # (chunk,) int32, zero-padded past the context
+    start_pos: int
+    last_idx: int        # chunk-local index of the context's last real token
+    final: bool
+    real_tokens: int     # non-pad tokens in this chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    prefill: Optional[PrefillWork]
+    decode_lanes: "tuple[int, ...]"
+    preempted: "tuple[int, ...]"      # rids preempted while planning
+
+    @property
+    def scheduled_tokens(self) -> int:
+        """Tokens this step carries (pads included: they occupy the same
+        compute/HBM footprint — this is the flatness quantity)."""
+        return (len(self.prefill.tokens) if self.prefill else 0) \
+            + len(self.decode_lanes)
+
+
+class ChunkedPrefillScheduler:
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+    def __init__(self, cache: PagedKVCache, *, slots: int, chunk: int):
+        bs = cache.cfg.block_size
+        if chunk < 1 or chunk % bs:
+            raise ValueError(f"chunk {chunk} must be a positive multiple of "
+                             f"the block size {bs}")
+        self.cache = cache
+        self.slots = slots
+        self.chunk = chunk
+        self.waiting: "deque[Request]" = deque()
+        self.running: "dict[int, Request]" = {}     # lane -> Request
+        self.phase: "dict[int, str]" = {}           # lane -> PREFILL|DECODE
+        self.max_len = cache.cfg.max_len
+
+    # ---------------------------------------------------------------- API
+    def submit(self, req: Request) -> None:
+        # worst-case resume context is prompt + (max_new - 1) generated
+        # tokens, padded up to a chunk multiple — must fit the block table
+        if round_up(req.plen + req.max_new, self.chunk) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {req.plen} + max_new "
+                f"{req.max_new} cannot fit the {self.max_len}-token table "
+                f"(chunk {self.chunk})")
+        if req.max_new < 1:
+            raise ValueError("max_new >= 1")
+        self.waiting.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.waiting) + len(self.running)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    def request_at(self, lane: int) -> Request:
+        return self.running[lane]
+
+    def to_decode(self, lane: int) -> None:
+        """Engine signal: final chunk done, first token sampled."""
+        req = self.running[lane]
+        self.phase[lane] = self.DECODE
+        req.decode_pos = len(req.context)
+
+    def finish(self, lane: int) -> Request:
+        req = self.running.pop(lane)
+        self.phase.pop(lane)
+        self.cache.free_lane(lane)
+        req.lane = -1
+        return req
+
+    # ---------------------------------------------------------- planning
+    def _free_lanes(self) -> "list[int]":
+        return [l for l in range(self.slots) if l not in self.running]
+
+    def _admit(self) -> None:
+        for lane in self._free_lanes():
+            if not self.waiting:
+                break
+            req = self.waiting.popleft()
+            req.lane = lane
+            req.context = np.concatenate(
+                [req.prompt, np.asarray(req.produced, np.int32)])
+            req.prefill_pos = 0
+            req.decode_pos = -1
+            self.running[lane] = req
+            self.phase[lane] = self.PREFILL
+
+    def _preempt_youngest(self, than_rid: int) -> "Request | None":
+        """Free the youngest running request strictly younger than
+        `than_rid`; re-queue it at the FRONT (it stays ahead of never-
+        admitted requests, preserving FCFS)."""
+        victims = [r for r in self.running.values() if r.rid > than_rid]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda r: r.rid)
+        lane = victim.lane
+        self.cache.free_lane(lane)
+        self.running.pop(lane)
+        self.phase.pop(lane)
+        victim.lane = -1
+        victim.context = None
+        victim.prefill_pos = 0
+        victim.decode_pos = -1
+        victim.preemptions += 1
+        self.waiting.appendleft(victim)
+        return victim
+
+    def _ensure_blocks(self, req: Request, upto_pos: int,
+                       preempted: "list[int]") -> bool:
+        while not self.cache.ensure(req.lane, upto_pos):
+            victim = self._preempt_youngest(req.rid)
+            if victim is None:
+                return False
+            preempted.append(victim.rid)
+        return True
+
+    def _padded_len(self, req: Request) -> int:
+        return round_up(len(req.context), self.chunk)
+
+    def schedule(self) -> "StepPlan | None":
+        """Plan one engine step: at most one prefill chunk + every decode
+        lane whose next block is (made) available.  Requests are visited
+        oldest-first, so preemption victims (always younger) are never
+        already in the plan.  Returns None when nothing is runnable."""
+        self._admit()
+        if not self.running:
+            return None
+        preempted: "list[int]" = []
+        prefill: "PrefillWork | None" = None
+        decode: "list[int]" = []
+        for req in sorted(self.running.values(), key=lambda r: r.rid):
+            if req.lane not in self.running or self.running[req.lane] is not req:
+                continue                       # preempted while planning
+            if self.phase[req.lane] == self.DECODE:
+                if self._ensure_blocks(req, req.decode_pos, preempted):
+                    decode.append(req.lane)
+                continue
+            if prefill is not None:
+                continue                       # one chunk per step (one shape)
+            start = req.prefill_pos
+            if not self._ensure_blocks(req, start + self.chunk - 1, preempted):
+                continue
+            ctx = req.context
+            toks = np.zeros(self.chunk, np.int32)
+            real = ctx[start : min(len(ctx), start + self.chunk)]
+            toks[: len(real)] = real
+            final = start + self.chunk >= self._padded_len(req)
+            prefill = PrefillWork(
+                lane=req.lane, rid=req.rid, tokens=toks, start_pos=start,
+                last_idx=(len(ctx) - 1 - start) if final else 0,
+                final=final, real_tokens=len(real))
+            req.prefill_pos = start + self.chunk
+        if prefill is None and not decode:
+            return None
+        decode = [l for l in decode if l in self.running]  # late victims
+        return StepPlan(prefill=prefill, decode_lanes=tuple(decode),
+                        preempted=tuple(preempted))

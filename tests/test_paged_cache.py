@@ -1,0 +1,103 @@
+"""Paged KV cache: block allocator, tables, defragmentation."""
+import numpy as np
+import pytest
+
+from repro.serving.cache import BlockAllocator, PagedKVCache
+
+pytestmark = pytest.mark.tier1
+
+
+class TestBlockAllocator:
+    def test_capacity_excludes_null_block(self):
+        a = BlockAllocator(8)
+        assert a.capacity == 7
+        assert a.num_free == 7
+
+    def test_all_or_nothing(self):
+        a = BlockAllocator(4)
+        assert a.allocate(3) is not None
+        assert a.num_free == 0
+        assert a.allocate(1) is None          # empty: no partial grant
+        a.free([1])
+        assert a.allocate(2) is None          # 1 free < 2 wanted
+        got = a.allocate(1)
+        assert got == [1]
+
+    def test_never_hands_out_null_block(self):
+        a = BlockAllocator(16)
+        got = a.allocate(15)
+        assert 0 not in got
+        assert sorted(got) == list(range(1, 16))
+
+    def test_double_free_rejected(self):
+        a = BlockAllocator(4)
+        got = a.allocate(2)
+        a.free(got)
+        with pytest.raises(ValueError):
+            a.free([got[0]])
+
+
+class TestPagedKVCache:
+    def kv(self, num_blocks=9, bs=4, mb=8, slots=2):
+        return PagedKVCache(slots=slots, num_blocks=num_blocks, block_size=bs,
+                            max_blocks_per_seq=mb)
+
+    def test_ensure_maps_blocks_on_demand(self):
+        kv = self.kv()
+        assert kv.ensure(0, 0)                # first token: one block
+        assert kv.num_mapped[0] == 1
+        assert kv.ensure(0, 3)                # still inside block 0
+        assert kv.num_mapped[0] == 1
+        assert kv.ensure(0, 4)                # crosses into block 1
+        assert kv.num_mapped[0] == 2
+        assert kv.blocks_in_use == 2
+        # table prefix is mapped to distinct non-null physical blocks
+        blocks = kv.blocks_for(0)
+        assert len(set(blocks)) == 2 and 0 not in blocks
+
+    def test_capacity_is_shared_not_per_lane(self):
+        # 8 allocatable blocks, 2 lanes: one lane may hold 6 while the other
+        # holds 2 — the dense engine would have reserved 4+4
+        kv = self.kv(num_blocks=9)
+        assert kv.ensure(0, 23)               # 6 blocks
+        assert kv.ensure(1, 7)                # 2 blocks
+        assert kv.blocks_in_use == 8
+        assert not kv.ensure(1, 11)           # pool exhausted
+        kv.free_lane(0)
+        assert kv.ensure(1, 11)
+
+    def test_free_lane_resets_table(self):
+        kv = self.kv()
+        kv.ensure(0, 10)
+        kv.free_lane(0)
+        assert kv.blocks_in_use == 0
+        assert (kv.tables[0] == 0).all()
+        assert kv.num_mapped[0] == 0
+
+    def test_overflow_raises(self):
+        kv = self.kv(num_blocks=32, mb=4)
+        with pytest.raises(ValueError):
+            kv.ensure(0, 4 * 4)               # past the block table
+
+    def test_defragment_compacts_and_preserves_mapping(self):
+        kv = self.kv(num_blocks=12, slots=3)
+        kv.ensure(0, 7)                       # 2 blocks
+        kv.ensure(1, 11)                      # 3 blocks
+        kv.ensure(2, 3)                       # 1 block
+        kv.free_lane(1)                       # punch a hole mid-pool
+        # simulate a pool: pool[b] == original physical id
+        pool = np.arange(12)
+        before = {lane: [pool[b] for b in kv.blocks_for(lane)]
+                  for lane in (0, 2)}
+        perm = kv.defragment()
+        new_pool = pool[perm]
+        after = {lane: [new_pool[b] for b in kv.blocks_for(lane)]
+                 for lane in (0, 2)}
+        assert before == after                # contents follow the remap
+        # live blocks are now the dense prefix 1..3
+        live = sorted(b for lane in (0, 2) for b in kv.blocks_for(lane))
+        assert live == [1, 2, 3]
+        assert perm[0] == 0                   # null block pinned
+        # allocator reflects the compaction
+        assert kv.blocks_in_use == 3
+        assert kv.ensure(1, 31)               # all 8 remaining blocks fit

@@ -1,4 +1,10 @@
-"""Serving engine: continuous batching over a slot pool."""
+"""Serving engine: continuous batching over the (now paged) engine.
+
+These are the seed engine's behavioural tests, kept verbatim against the
+rewritten paged `ServingEngine` — passing them means the new engine is a
+drop-in replacement; `test_serving_paged.py` covers the paged-specific
+surface (parity, preemption, bounded compilation) and the dense seed
+engine lives on in `serving.dense_engine`."""
 import numpy as np
 import pytest
 
@@ -7,6 +13,8 @@ import jax
 from repro.models import registry
 from repro.models import transformer as tf
 from repro.serving.engine import ServeConfig, ServingEngine
+
+pytestmark = pytest.mark.tier1
 
 
 @pytest.fixture(scope="module")
