@@ -220,8 +220,8 @@ def bench_streamer_modes():
     def run():
         if len(jax.devices()) < 4:
             return "skipped(<4 devices)"
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh_compat, mesh_context
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         L, D, F, B = 4, 32, 64, 8
         key = jax.random.PRNGKey(0)
         ws = {"w1": jax.random.normal(key, (L, D, F)) * 0.05,
@@ -234,7 +234,7 @@ def bench_streamer_modes():
             return c + jnp.tanh(c @ w["w1"]) @ w["w2"]
 
         outs = {}
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             for mode in ("resident", "insitu", "naive_pp", "gpp"):
                 f = jax.jit(lambda x, ws, m=mode: stream_layers(
                     apply_fn, x, ws, L,
@@ -402,24 +402,32 @@ def bench_dense_timing_samples():
                 fn(*args).block_until_ready()
             return (time.perf_counter() - t0) / REPS
 
+        # provenance: these jit'd timing loops measure a COMPILED path, so on
+        # an accelerator backend the samples rank as "compiled" and
+        # `TimingCache.effective_rates` will prefer them over host samples;
+        # on the CPU host they are tagged "host" (dispatch-dominated, no real
+        # HBM link) and only stand in until a TPU run refreshes the record.
+        provenance = ("compiled" if jax.default_backend() in ("tpu", "gpu")
+                      else "host")
         tc = TimingCache()
         for _ in range(5):
             base = batch_time(noop, z)
             t_cmp = max(batch_time(mm, x, w) - base, 1e-9)
             t_dma = max(batch_time(cp, w) - base, 1e-9)
             tc.record(block_bytes=tile_bytes, compute_flops=tile_flops,
-                      t_dma=t_dma, t_compute=t_cmp)
+                      t_dma=t_dma, t_compute=t_cmp, measured_on=provenance)
         analytic = plan_matmul_tiles(8, 4096, 8192)
         measured = plan_matmul_tiles(8, 4096, 8192, timing=tc)
         fps, bps = tc.effective_rates()
-        return tc, analytic, measured, fps, bps
+        return tc, analytic, measured, fps, bps, provenance
 
-    us, (tc, analytic, measured, fps, bps) = _timed(run)
+    us, (tc, analytic, measured, fps, bps, provenance) = _timed(run)
     _record(
         "dense_timing_samples", us,
         f"measured_flops={fps:.2e}_bytes={bps:.2e}"
-        f"_ring_analytic={analytic.num_bufs}_measured={measured.num_bufs}",
-        extra={"samples": tc.to_json()})
+        f"_ring_analytic={analytic.num_bufs}_measured={measured.num_bufs}"
+        f"_on={provenance}",
+        extra={"samples": tc.to_json(), "measured_on": provenance})
 
 
 def bench_serving_paged_vs_dense():
@@ -515,6 +523,84 @@ def bench_serving_step_metrics():
                "hbm_bytes_per_step_cov": round(bytes_cov, 4)})
 
 
+def bench_serving_paged_attn_gather_vs_kernel():
+    """Paged-attention read path: gather (materialize every lane's logical
+    sequence in HBM) vs the block-table Pallas kernel (stream live KV blocks
+    through a VMEM ring).
+
+    Headlines: per-step attention-read HBM bytes (materialized by the gather
+    vs moved by the kernel ring — live blocks only) and tokens/sec under the
+    "auto" routing, which must be no worse than the explicit gather path
+    (identical on a CPU host where auto resolves to ref; the kernel takes
+    over on TPU).  Kernel numerics are validated with a short interpret-mode
+    engine run that must reproduce the gather engine's tokens exactly."""
+    import jax
+    import numpy as np
+    from repro.models import registry
+    from repro.models import transformer as tf
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    SLOTS, MAX_LEN, REQUESTS, MAX_NEW = 4, 128, 12, 10
+
+    def trace(mode, requests=REQUESTS, max_new=MAX_NEW):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=SLOTS, max_len=MAX_LEN, paged_attn_kernel=mode))
+        # warm-up: compile both step shapes before the timed trace, so
+        # tokens/sec compares the steady-state read paths, not jit time
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run()
+        rng = np.random.default_rng(0)
+        rids = [eng.submit(
+            rng.integers(0, cfg.vocab_size, size=int(n)).tolist(),
+            max_new_tokens=max_new)
+            for n in rng.integers(4, 60, size=requests)]
+        t0 = time.perf_counter()
+        results = eng.run()
+        dt = time.perf_counter() - t0
+        tokens = sum(len(results[r]) for r in rids)
+        return [results[r] for r in rids], tokens / dt, eng
+
+    # best-of-2 per mode: on a CPU host both modes resolve to the same ref
+    # path, so tokens/sec differences are scheduler noise — de-noise before
+    # asserting the "auto no worse" headline
+    streams_ref, tps_gather, eng_ref = trace("ref")
+    streams_auto, tps_auto, eng_auto = trace("auto")
+    tps_gather = max(tps_gather, trace("ref")[1])
+    tps_auto = max(tps_auto, trace("auto")[1])
+    if eng_auto.paged_attn_mode == "ref":
+        # same resolved path (CPU host): streams must be token-identical.
+        # On TPU auto takes the pallas kernel, whose reassociated f32 math
+        # may legitimately flip an argmax — the interpret-parity check
+        # below is the numerics gate there.
+        assert streams_auto == streams_ref, "auto routing changed outputs"
+    # interpret-mode kernel parity on a short slice of the same trace
+    streams_ki, _, _ = trace("interpret", requests=2, max_new=3)
+    streams_rs, _, _ = trace("ref", requests=2, max_new=3)
+    assert streams_ki == streams_rs, "kernel parity failed"
+
+    gather = float(np.mean([m["attn_bytes_gather"] for m in eng_ref.metrics]))
+    stream = float(np.mean([m["attn_bytes_stream"] for m in eng_ref.metrics]))
+    reduction = gather / max(stream, 1.0)
+    _record_serving(
+        "serving_paged_attn_gather_vs_kernel", 0.0,
+        f"attn_bytes/step_gather={gather:.0f}_kernel={stream:.0f}"
+        f"_reduction={reduction:.2f}x_tok/s_auto={tps_auto:.0f}"
+        f"vs_gather={tps_gather:.0f}_kernel_parity=ok",
+        extra={
+            "attn_bytes_per_step_gather": round(gather, 1),
+            "attn_bytes_per_step_kernel": round(stream, 1),
+            "bytes_reduction": round(reduction, 3),
+            "tokens_per_s_gather": round(tps_gather, 1),
+            "tokens_per_s_auto": round(tps_auto, 1),
+            "paged_attn_mode_auto": eng_auto.paged_attn_mode,
+            "kernel_interpret_parity": True,
+            "slots": SLOTS, "max_len": MAX_LEN, "requests": REQUESTS,
+            "max_new": MAX_NEW,
+        })
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     try:
@@ -531,6 +617,7 @@ def main() -> None:
         bench_dense_timing_samples()
         bench_serving_paged_vs_dense()
         bench_serving_step_metrics()
+        bench_serving_paged_attn_gather_vs_kernel()
         bench_streamer_modes()
     finally:
         # keep the partial perf record even if one benchmark dies mid-run

@@ -15,3 +15,25 @@ python -m pytest -x -q "$@"
 echo "--- serving smoke (paged engine) ---"
 python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
     --requests 3 --max-new 4 --slots 2 --max-len 64
+echo "--- paged-attention kernel parity smoke (interpret mode) ---"
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import registry, transformer as tf
+from repro.serving import ServeConfig, ServingEngine
+
+cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+prompts = [[3, 1, 4, 1, 5], [9, 2, 6]]
+
+def run(mode):
+    eng = ServingEngine(cfg, params, ServeConfig(
+        slots=2, max_len=64, block_size=8, prefill_chunk=8,
+        paged_attn_kernel=mode))
+    rids = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    res = eng.run()
+    return [res[r] for r in rids]
+
+gather, kernel = run("ref"), run("interpret")
+assert gather == kernel, (gather, kernel)
+print(f"paged-attention parity OK (gather == kernel): {kernel}")
+PY

@@ -63,6 +63,15 @@ class ModelConfig:
                                      # auto | ref | kernel | interpret — auto
                                      # streams big weights through the GPP
                                      # Pallas kernel on TPU, jnp elsewhere
+    paged_attn_kernel: str = "auto"  # paged serving READ path routing
+                                     # (kernels.ops.paged_attn, used by the
+                                     # *_paged attention fns): auto | pallas |
+                                     # interpret | ref — "pallas" streams KV
+                                     # blocks through the VMEM-ring Pallas
+                                     # kernel (block tables as scalar
+                                     # prefetch), "ref" gathers pools through
+                                     # the tables (pre-kernel math, exact),
+                                     # "auto" = pallas on TPU / ref elsewhere
     remat: str = "block"             # none | block  (activation checkpointing)
     optimizer: str = "adamw"         # adamw | adafactor (1T-scale state budget)
     # serving (paged-KV engine defaults; ServeConfig fields of the same

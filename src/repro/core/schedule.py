@@ -291,6 +291,9 @@ def tokens_per_step_cov(counts: "list[int] | list[float]") -> float:
 # Measured-timing feedback: TimingCache
 # ---------------------------------------------------------------------------
 
+TIMING_PROVENANCES = ("host", "compiled")
+
+
 @dataclasses.dataclass(frozen=True)
 class TimingSample:
     """One measured (transfer, compute) pair for a weight tile.
@@ -299,12 +302,19 @@ class TimingSample:
     on; t_dma / t_compute are the measured wall-times [s] to move and to
     matmul that tile.  Rates (bytes/s, flop/s) are what the planner consumes,
     so samples at any tile size inform plans at every tile size.
+
+    measured_on records provenance: "host" samples come from eager/CPU timing
+    loops (dispatch overhead, no real HBM), "compiled" samples from a
+    compiled run on the accelerator the plan will execute on.  Consumers
+    (`TimingCache.effective_rates`) prefer compiled samples when any exist —
+    a host-measured rate is a stand-in, not ground truth.
     """
 
     block_bytes: float
     compute_flops: float
     t_dma: float
     t_compute: float
+    measured_on: str = "host"
 
     @property
     def bytes_per_s(self) -> float:
@@ -337,24 +347,34 @@ class TimingCache:
         return tuple(self._samples)
 
     def record(self, *, block_bytes: float, compute_flops: float,
-               t_dma: float, t_compute: float) -> None:
+               t_dma: float, t_compute: float,
+               measured_on: str = "host") -> None:
         if block_bytes <= 0 or compute_flops <= 0:
             raise ValueError("block_bytes and compute_flops must be positive")
         if t_dma < 0 or t_compute < 0:
             raise ValueError("measured times must be non-negative")
+        if measured_on not in TIMING_PROVENANCES:
+            raise ValueError(
+                f"measured_on must be one of {TIMING_PROVENANCES}, "
+                f"got {measured_on!r}")
         self._samples.append(TimingSample(block_bytes, compute_flops,
-                                          t_dma, t_compute))
+                                          t_dma, t_compute, measured_on))
 
     def effective_rates(self) -> "tuple[float, float]":
         """(flops_per_s, transfer_bytes_per_s) — median of per-sample rates.
 
         Median (not mean): one cold-cache or preempted sample must not drag
-        the plan; the planner wants the steady-state rate.
+        the plan; the planner wants the steady-state rate.  When any
+        compiled-run samples exist they are used exclusively — host-measured
+        rates (eager dispatch, no real HBM link) only stand in until a
+        compiled path has been profiled.
         """
         if not self._samples:
             raise ValueError("TimingCache has no samples")
-        fps = statistics.median(s.flops_per_s for s in self._samples)
-        bps = statistics.median(s.bytes_per_s for s in self._samples)
+        pool = [s for s in self._samples if s.measured_on == "compiled"] \
+            or self._samples
+        fps = statistics.median(s.flops_per_s for s in pool)
+        bps = statistics.median(s.bytes_per_s for s in pool)
         return fps, bps
 
     # ---- persistence (benchmarks/run.py emits, sessions consume) ----
@@ -408,6 +428,23 @@ _SUBLANE = 8    # f32 sublane: block_m / block_k granularity
 def round_up(x: int, mult: int) -> int:
     """Smallest multiple of `mult` >= x (tile, block, and chunk sizing)."""
     return ((x + mult - 1) // mult) * mult
+
+
+def _resolve_rates(flops_per_s, transfer_bytes_per_s,
+                   timing: "TimingCache | None") -> "tuple[float, float]":
+    """Shared rate resolution for the tile/ring planners: an explicit
+    `timing` cache (or, when nothing was passed, the ambient default cache)
+    replaces the analytic datasheet constants with median measured rates;
+    explicitly passed rate kwargs win over the ambient default."""
+    if timing is None and flops_per_s is None and transfer_bytes_per_s is None:
+        timing = _DEFAULT_TIMING
+    if timing is not None and len(timing):
+        flops_per_s, transfer_bytes_per_s = timing.effective_rates()
+    if flops_per_s is None:
+        flops_per_s = PEAK_FLOPS
+    if transfer_bytes_per_s is None:
+        transfer_bytes_per_s = HBM_BYTES_PER_S
+    return flops_per_s, transfer_bytes_per_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -480,14 +517,8 @@ def plan_matmul_tiles(
     explicitly passed rate kwarg wins over the ambient default cache (but
     not over an explicitly passed `timing`).
     """
-    if timing is None and flops_per_s is None and transfer_bytes_per_s is None:
-        timing = _DEFAULT_TIMING
-    if timing is not None and len(timing):
-        flops_per_s, transfer_bytes_per_s = timing.effective_rates()
-    if flops_per_s is None:
-        flops_per_s = PEAK_FLOPS
-    if transfer_bytes_per_s is None:
-        transfer_bytes_per_s = HBM_BYTES_PER_S
+    flops_per_s, transfer_bytes_per_s = _resolve_rates(
+        flops_per_s, transfer_bytes_per_s, timing)
     if M < 1 or K < 1 or N < 1:
         raise ValueError(f"bad matmul shape M={M} K={K} N={N}")
     if num_bufs is not None and num_bufs < 1:
@@ -553,3 +584,74 @@ def plan_matmul_tiles(
         out_itemsize=out_itemsize)
     return MatmulTilePlan(block_m=bm, block_n=bn, block_k=bk, num_bufs=g,
                           vmem_bytes=used)
+
+
+# ---------------------------------------------------------------------------
+# KV-block ring planner for the paged-attention kernel
+# (kernels/paged_attention.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttnPlan:
+    """Ring depth + chunking for streaming KV blocks through VMEM.
+
+    The paged-attention kernel is the GPP schedule applied to the attention
+    read path: a physical KV block is the "macro", its HBM->VMEM DMA the
+    "rewrite", the per-block online-softmax flash step the "compute".
+    num_bufs is the KV-block ring depth G (1 in-situ, 2 naive ping-pong,
+    >= 3 generalized ping-pong with C = G-1 chunks per block).
+    """
+
+    num_bufs: int
+    chunks: int
+    vmem_bytes: int
+
+
+def plan_paged_attn(
+    *,
+    block_bytes: int,
+    compute_flops: float,
+    fixed_bytes: int = 0,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    max_ring: int = 8,
+    num_bufs: "int | None" = None,
+    flops_per_s: "float | None" = None,
+    transfer_bytes_per_s: "float | None" = None,
+    timing: "TimingCache | None" = None,
+) -> PagedAttnPlan:
+    """Pick the KV-block ring depth for the paged-attention kernel.
+
+    block_bytes    bytes one logical KV block moves HBM->VMEM per grid step
+                   (both pools: k+v, or c_kv+k_rope)
+    compute_flops  flops of one per-block flash step (QK^T + PV)
+    fixed_bytes    non-ring VMEM working set (queries, accumulator, output)
+
+    Rates come from the same measured-feedback path as `plan_matmul_tiles`:
+    an explicit/ambient `TimingCache` overrides the analytic constants, with
+    compiled-run samples preferred over host ones.  The ring shrinks (never
+    errors) until fixed + G*block_bytes fits the VMEM budget.
+    """
+    if block_bytes <= 0:
+        raise ValueError("block_bytes must be positive")
+    flops_per_s, transfer_bytes_per_s = _resolve_rates(
+        flops_per_s, transfer_bytes_per_s, timing)
+    if num_bufs is not None:
+        if num_bufs < 1:
+            raise ValueError("num_bufs >= 1")
+        g = num_bufs
+    else:
+        g = plan_stream(
+            block_bytes=block_bytes,
+            compute_flops=compute_flops,
+            flops_per_s=flops_per_s,
+            transfer_bytes_per_s=transfer_bytes_per_s,
+            max_ring=max_ring,
+        ).ring_depth
+        while g > 1 and fixed_bytes + g * block_bytes > vmem_budget:
+            g -= 1      # shrink toward in-situ instead of erroring
+    used = fixed_bytes + g * block_bytes
+    if used > vmem_budget and num_bufs is None:
+        raise ValueError(
+            f"paged-attention working set {used / 2**20:.1f} MiB exceeds the "
+            f"{vmem_budget / 2**20:.0f} MiB VMEM budget even at ring depth 1")
+    return PagedAttnPlan(num_bufs=g, chunks=max(1, g - 1), vmem_bytes=used)

@@ -1,0 +1,167 @@
+"""Sharding policy: pytree -> PartitionSpec trees for the jitted steps.
+
+One rule object (`ShardRules`) drives every placement decision the launcher
+makes, so train / prefill / decode steps and the GPP weight streamer all
+agree on where a tensor lives:
+
+  tp_axis     tensor parallelism: the output-feature dim of column-parallel
+              projections (q/k/v/up/gate, embeddings' vocab dim) and the
+              contraction dim of the matching row-parallel ones (o-proj,
+              down-proj) — GSPMD inserts the reduce.  MoE expert stacks put
+              the EXPERT dim here under `moe_ep_mode="tp"`.
+  fsdp_axes   ZeRO-3: one additional dim of every large tensor is sharded
+              over the data axes and all-gathered per layer — exactly the
+              "off-chip weight rewrite" the paper's streamer schedules; the
+              streaming specs below are the (sharded, gathered) pair
+              `core.streamer.stream_layers` constrains between.
+  dp_axes     batch sharding for activations/caches.
+
+Placement is shape-driven (dims must divide the axis size; anything that
+doesn't stays replicated), so smoke configs on a 2x2 host mesh and the
+production 16x16 mesh go through the same code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRules:
+    tp_axis: str = "model"
+    fsdp_axes: "tuple[str, ...]" = ("data",)
+    dp_axes: "tuple[str, ...]" = ("data",)
+    fsdp: bool = True                  # ZeRO-3 shard params over fsdp_axes
+    moe_ep_mode: str = "tp"            # experts over tp_axis ("tp") or dp
+    moe_serve_resident: bool = False   # serving: experts resident, no FSDP
+
+
+# row-parallel weights: TP goes on the leading (contraction) dim so the
+# matmul reduces over the already-sharded axis (o-proj, down-proj)
+_ROW_PARALLEL = ("w_o", "w_down", "w_out")
+# 1-D / tiny leaves that always stay replicated
+_REPLICATED = ("scale", "kv_norm", "q_norm", "k_norm", "b_q", "b_k", "b_v")
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _axes_entry(axes: "tuple[str, ...]"):
+    """PartitionSpec entry for a 1-or-many axis tuple."""
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        key = getattr(k, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    """Leaves under the "blocks" group carry a leading superblock-stack dim
+    (same convention as transformer.is_stacked_cache_path)."""
+    return any(getattr(k, "key", None) == "blocks" for k in path)
+
+
+def _leaf_pspec(shape, lead: int, name: str, mesh, rules: ShardRules,
+                *, fsdp: "bool | None" = None) -> P:
+    """Placement for one leaf: TP dim first, then one FSDP dim, shape-gated."""
+    fsdp = rules.fsdp if fsdp is None else fsdp
+    dims: "list[Any]" = [None] * len(shape)
+    rank = len(shape) - lead
+    if rank <= 1 or name in _REPLICATED:
+        return P(*dims)
+    tp = mesh.shape.get(rules.tp_axis, 1)
+    tp_dim = None
+    if tp > 1:
+        is_expert = rank == 3 and name in ("w_gate", "w_up", "w_down")
+        if is_expert and rules.moe_ep_mode == "tp":
+            cand = lead                       # expert dim over the model axis
+        elif name in _ROW_PARALLEL or name == "embedding":
+            cand = lead                       # contraction / vocab dim
+        else:
+            cand = len(shape) - 1             # column-parallel output dim
+        for d in (cand, len(shape) - 1):
+            if shape[d] % tp == 0:
+                tp_dim = d
+                dims[d] = rules.tp_axis
+                break
+    if fsdp and _axis_size(mesh, rules.fsdp_axes) > 1:
+        fs = _axis_size(mesh, rules.fsdp_axes)
+        for d in range(lead, len(shape)):
+            if d != tp_dim and shape[d] % fs == 0:
+                dims[d] = _axes_entry(rules.fsdp_axes)
+                break
+    return P(*dims)
+
+
+def param_pspecs(pspecs: Pytree, mesh, rules: ShardRules) -> Pytree:
+    """PartitionSpec tree for the full param pytree (stacked "blocks" leaves
+    keep their leading superblock dim unsharded — it is the scan axis)."""
+    def f(path, s):
+        return _leaf_pspec(s.shape, 1 if _is_stacked(path) else 0,
+                           _leaf_name(path), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(f, pspecs)
+
+
+# ---------------------------------------------------------------------------
+# streaming (sharded -> gathered) spec pairs for core.streamer.stream_layers
+# ---------------------------------------------------------------------------
+
+def sharded_pspecs_one_layer(tree: Pytree, mesh, rules: ShardRules) -> Pytree:
+    """Per-layer resident layout: TP + the ZeRO-3 FSDP shard — the "off-chip"
+    form the streamer gathers FROM."""
+    def f(path, s):
+        return _leaf_pspec(s.shape, 0, _leaf_name(path), mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def gathered_pspecs(tree: Pytree, mesh, rules: ShardRules) -> Pytree:
+    """Gathered (compute) layout: the FSDP dim replicated again, TP kept —
+    what one layer looks like while its GeMMs run."""
+    def f(path, s):
+        return _leaf_pspec(s.shape, 0, _leaf_name(path), mesh, rules,
+                           fsdp=False)
+
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+# ---------------------------------------------------------------------------
+# cache placement
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(tree: Pytree, mesh, rules: ShardRules, batch: int) -> Pytree:
+    """KV-cache / recurrent-state placement: batch over the dp axes when it
+    divides them; otherwise (long-context B < dp, e.g. long_500k at B=1) the
+    SEQUENCE dim is sharded over dp instead, so a 500k-token cache never
+    has to fit one device."""
+    dpn = _axis_size(mesh, rules.dp_axes)
+    dp_entry = _axes_entry(rules.dp_axes)
+
+    def f(path, s):
+        lead = 1 if _is_stacked(path) else 0
+        dims: "list[Any]" = [None] * len(s.shape)
+        if dpn > 1:
+            if batch % dpn == 0:
+                dims[lead] = dp_entry
+            elif (len(s.shape) > lead + 1
+                  and s.shape[lead + 1] % dpn == 0):
+                dims[lead + 1] = dp_entry
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(f, tree)

@@ -48,7 +48,8 @@ import jax.numpy as jnp
 
 from repro.core.schedule import HBM_BYTES_PER_S, PEAK_FLOPS, plan_stream
 from repro.kernels.gpp_matmul import _ACTIVATIONS, gpp_matmul, gpp_matmul_grouped
-from repro.kernels.ref import dense_grouped_ref, dense_ref
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import dense_grouped_ref, dense_ref, paged_attn_ref
 
 # below this weight size the DMA pipeline cannot beat a resident matmul
 DENSE_KERNEL_MIN_BYTES = 1 * 1024 * 1024
@@ -56,6 +57,12 @@ DENSE_KERNEL_MIN_BYTES = 1 * 1024 * 1024
 # shared by `dense` and `dense_grouped` (the grouped path accepts the same
 # four modes; "kernel"/"interpret" route through gpp_matmul_grouped)
 DENSE_MODES = ("auto", "ref", "kernel", "interpret")
+
+# paged-attention read-path routing (cfg.paged_attn_kernel): "pallas" is the
+# compiled block-table kernel, "interpret" the same kernel on the CPU
+# interpreter, "ref" the exact gather+_sdpa math the serving engine shipped
+# with, "auto" picks pallas on TPU and ref elsewhere (like `dense`'s auto).
+PAGED_ATTN_MODES = ("auto", "ref", "pallas", "interpret")
 
 
 def plan_ring_depth(M: int, K: int, block_n: int, dtype=jnp.bfloat16, max_ring: int = 8) -> int:
@@ -253,6 +260,66 @@ def dense(
     else:
         y2 = _dense_kernel(activation, mode == "interpret", x2, w2, bias, w_scale)
     return y2.reshape(*lead, *out_dims)
+
+
+# ---------------------------------------------------------------------------
+# paged-attention entry point (serving read path)
+# ---------------------------------------------------------------------------
+
+def resolve_paged_attn_mode(mode: str, *arrays) -> str:
+    """Resolve "auto" for the paged-attention read path: the Pallas kernel on
+    TPU (pallas_call is not GSPMD-partitionable, so an ambient mesh falls
+    back, mirroring `dense`'s auto policy), the exact gather math elsewhere.
+    Returns one of "ref" | "pallas" | "interpret"."""
+    if mode not in PAGED_ATTN_MODES:
+        raise ValueError(
+            f"paged_attn mode must be one of {PAGED_ATTN_MODES}, got {mode!r}")
+    if mode != "auto":
+        return mode
+    return ("pallas" if _targets_tpu(*arrays) and not _ambient_mesh_active()
+            else "ref")
+
+
+def paged_attn(
+    q: jnp.ndarray,
+    pool_a: jnp.ndarray,
+    pool_b: jnp.ndarray,
+    tables: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    num_kv_heads: int,
+    scale: float,
+    window: "int | None" = None,
+    mla: bool = False,
+    mode: str = "auto",
+    num_bufs: "int | None" = None,
+) -> jnp.ndarray:
+    """Paged attention over shared block pools, routed like `dense`.
+
+    q: (B, S, H, dk); pool_a/pool_b: (nb, bs, ...) physical pools;
+    tables: (B, MB) int32 block table (0 = reserved null block);
+    positions: (B,) int32 per-lane query start positions.
+
+    GQA: pools are k/v, dk = head_dim.  MLA (`mla=True`): pools are
+    c_kv/k_rope, q is already absorbed through w_uk (dk = kv_lora + rope),
+    and the return value is the latent output for the caller to up-project.
+
+    mode:
+      auto       pallas on TPU, else ref
+      pallas     the streaming Pallas kernel (compiled)
+      interpret  the same kernel on the interpreter (CPU validation)
+      ref        gather through the tables + exact `_sdpa` math — the
+                 pre-kernel serving read path, bit-for-bit
+    """
+    mode = resolve_paged_attn_mode(mode, q, pool_a, pool_b)
+    if mode == "ref":
+        return paged_attn_ref(q, pool_a, pool_b, tables, positions,
+                              num_kv_heads=num_kv_heads, scale=scale,
+                              window=window, mla=mla)
+    return paged_attention(q, pool_a, pool_b, tables, positions,
+                           num_kv_heads=num_kv_heads, scale=scale,
+                           window=window, mla=mla, num_bufs=num_bufs,
+                           interpret=mode == "interpret")
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,11 @@ def main(argv=None):
                     help="prefill chunk tokens (0 = plan_serve_chunk)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged-attn", choices=("auto", "pallas", "interpret",
+                                             "ref"), default="auto",
+                    help="paged-attention read path: pallas streams KV "
+                         "blocks through the VMEM-ring kernel, ref gathers "
+                         "pools, interpret runs the kernel on CPU")
     args = ap.parse_args(argv)
 
     import jax
@@ -45,7 +50,8 @@ def main(argv=None):
     serve = ServeConfig(
         slots=args.slots, max_len=args.max_len, temperature=args.temperature,
         seed=args.seed, block_size=args.block_size,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        paged_attn_kernel=args.paged_attn)
     if args.engine == "paged":
         engine = ServingEngine(cfg, params, serve)
     elif args.engine == "dense":

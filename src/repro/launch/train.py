@@ -74,7 +74,8 @@ def main(argv=None):
                              and dt > self.factor * self.median)
                 self._times.append(dt)
                 return straggled
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                                       mesh_context)
     from repro.launch.steps import make_train_step
     from repro.models import registry
     from repro.models import transformer as tf
@@ -98,7 +99,7 @@ def main(argv=None):
     print(f"mesh: {dict(mesh.shape)}  devices: {len(jax.devices())}")
 
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         bundle = make_train_step(cfg, mesh, shape)
 
         key = jax.random.PRNGKey(0)

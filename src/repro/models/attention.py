@@ -17,7 +17,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import dense
+from repro.kernels.ops import dense, paged_attn, resolve_paged_attn_mode
 from repro.models.layers import sds, rope
 
 NEG_INF = -1e30
@@ -41,6 +41,11 @@ class AttnConfig:
     # "auto" streams big weights through the GPP Pallas kernel on TPU and
     # falls back to the bit-identical jnp path elsewhere
     dense_mode: str = "auto"
+    # kernels.ops.paged_attn routing for the paged serving read path
+    # (cfg.paged_attn_kernel): "ref" keeps the gather+_sdpa math below,
+    # "pallas"/"interpret" stream KV blocks through the VMEM-ring kernel,
+    # "auto" picks pallas on TPU and ref elsewhere
+    paged_mode: str = "auto"
 
     @property
     def is_mla(self) -> bool:
@@ -430,18 +435,28 @@ def paged_mask(positions, T: int, *, window: "int | None" = None):
     return m
 
 
+def _gqa_paged_attend(c: AttnConfig, q, kc, vc, tables, positions):
+    """Dispatch the paged GQA read through `kernels.ops.paged_attn`: "ref"
+    gathers each lane's logical sequence through the tables and runs the
+    exact `_sdpa` math (`kernels.ref.paged_attn_ref`, the pre-kernel path
+    bit-for-bit); the kernel modes stream KV blocks through the VMEM ring
+    instead — the gathered (B, MB*bs, ...) sequence is never formed."""
+    return paged_attn(q, kc, vc, tables, positions,
+                      num_kv_heads=c.num_kv_heads,
+                      scale=1.0 / math.sqrt(c.head_dim),
+                      window=c.window, mode=c.paged_mode)
+
+
 def gqa_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
     """One prefill chunk (B=1): project, write whole blocks, attend over the
-    gathered pool.  x: (1, S, D), start_pos: traced block-aligned scalar."""
+    lane's blocks.  x: (1, S, D), start_pos: traced block-aligned scalar."""
     S = x.shape[1]
     positions = start_pos + jnp.arange(S, dtype=jnp.int32)[None]
     q, k, v = gqa_project_qkv(p, c, x, positions)
     kc = _paged_write_blocks(cache["k"], table_row, start_pos, k)
     vc = _paged_write_blocks(cache["v"], table_row, start_pos, v)
-    kseq = _paged_gather(kc, table_row)
-    vseq = _paged_gather(vc, table_row)
-    mask = causal_mask(S, kseq.shape[1], start_pos, c.window)
-    out = _sdpa(q, kseq, vseq, mask, 1.0 / math.sqrt(c.head_dim))
+    out = _gqa_paged_attend(c, q, kc, vc, table_row,
+                            jnp.reshape(start_pos, (1,)).astype(jnp.int32))
     return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
             {"k": kc, "v": vc})
 
@@ -452,12 +467,40 @@ def gqa_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
     q, k, v = gqa_project_qkv(p, c, x, positions[:, None])
     kc = _paged_write_token(cache["k"], tables, positions, active, k[:, 0])
     vc = _paged_write_token(cache["v"], tables, positions, active, v[:, 0])
-    kseq = _paged_gather(kc, tables)
-    vseq = _paged_gather(vc, tables)
-    mask = paged_mask(positions, kseq.shape[1], window=c.window)
-    out = _sdpa(q, kseq, vseq, mask, 1.0 / math.sqrt(c.head_dim))
+    out = _gqa_paged_attend(c, q, kc, vc, tables, positions)
     return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
             {"k": kc, "v": vc})
+
+
+def _mla_paged_attend(p, c: AttnConfig, q, ckv, kr, tables, positions,
+                      *, prefill: bool):
+    """Dispatch the paged MLA read.  "ref" gathers the latent pools and runs
+    the unmodified `_mla_attend` (up-project k/v, then `_sdpa`).  The kernel
+    modes use the weight-absorbed decode form instead: q is folded through
+    w_uk so logits contract directly against the streamed c_kv/k_rope blocks
+    (MQA over the latent), and the latent-space output is up-projected
+    through w_uv after the kernel — the same math reassociated, with the
+    compressed latent (not full K/V) the only thing that crosses HBM."""
+    mode = resolve_paged_attn_mode(c.paged_mode, q, ckv, kr)
+    if mode == "ref":
+        ckv_seq = _paged_gather(ckv, tables)
+        kr_seq = _paged_gather(kr, tables)
+        if prefill:
+            mask = causal_mask(q.shape[1], ckv_seq.shape[1], positions[0])
+        else:
+            mask = paged_mask(positions, ckv_seq.shape[1])
+        return _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
+    nope = c.head_dim
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    # absorb w_uk into q: q_abs[h] . c_kv[t] == q_nope[h] . k_nope[t, h]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, p["w_uk"]).astype(q.dtype)
+    q_eff = jnp.concatenate([q_abs, q_rope], axis=-1)
+    out_lat = paged_attn(q_eff, ckv, kr, tables, positions,
+                         num_kv_heads=1, mla=True,
+                         scale=1.0 / math.sqrt(nope + c.rope_head_dim),
+                         mode=mode)
+    out = jnp.einsum("bshr,rhn->bshn", out_lat, p["w_uv"]).astype(q.dtype)
+    return dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2)
 
 
 def mla_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
@@ -469,10 +512,9 @@ def mla_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
     c_kv, k_rope = _mla_latent(p, c, x, positions)
     ckv = _paged_write_blocks(cache["c_kv"], table_row, start_pos, c_kv)
     kr = _paged_write_blocks(cache["k_rope"], table_row, start_pos, k_rope)
-    ckv_seq = _paged_gather(ckv, table_row)
-    kr_seq = _paged_gather(kr, table_row)
-    mask = causal_mask(S, ckv_seq.shape[1], start_pos)
-    out = _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
+    out = _mla_paged_attend(p, c, q, ckv, kr, table_row,
+                            jnp.reshape(start_pos, (1,)).astype(jnp.int32),
+                            prefill=True)
     return out, {"c_kv": ckv, "k_rope": kr}
 
 
@@ -483,10 +525,8 @@ def mla_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
                              c_kv_new[:, 0])
     kr = _paged_write_token(cache["k_rope"], tables, positions, active,
                             k_rope_new[:, 0])
-    ckv_seq = _paged_gather(ckv, tables)
-    kr_seq = _paged_gather(kr, tables)
-    mask = paged_mask(positions, ckv_seq.shape[1])
-    out = _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
+    out = _mla_paged_attend(p, c, q, ckv, kr, tables, positions,
+                            prefill=False)
     return out, {"c_kv": ckv, "k_rope": kr}
 
 

@@ -57,6 +57,7 @@ def _attn_cfg(cfg: ModelConfig, kind: str) -> attn.AttnConfig:
         rope_head_dim=cfg.rope_head_dim,
         dtype=cfg.jdtype,
         dense_mode=cfg.dense_kernel,
+        paged_mode=cfg.paged_attn_kernel,
     )
 
 
@@ -412,6 +413,25 @@ def supports_paged(cfg: ModelConfig) -> bool:
     kinds = tuple(cfg.prefix_pattern) + tuple(cfg.pattern)
     return (cfg.input_mode == "tokens"
             and all(k.split(":")[0] in PAGED_BLOCK_KINDS for k in kinds))
+
+
+def window_horizon(cfg: ModelConfig) -> "int | None":
+    """Oldest position any layer can still attend to, relative to the
+    current query position — the block-reclamation horizon.
+
+    Finite only when EVERY layer is sliding-window: block tables are shared
+    across layers, so a physical block is reclaimable only once every
+    layer's mask has moved past it.  One full-attention (or MLA) layer pins
+    the whole history -> None (no reclamation), which is why gemma3's global
+    layers keep their full-length KV while an all-local stack plateaus.
+    """
+    kinds = tuple(cfg.prefix_pattern) + tuple(cfg.pattern)
+    if not kinds:
+        return None
+    for k in kinds:
+        if not k.endswith(":window"):
+            return None
+    return cfg.window_size
 
 
 def paged_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int) -> Pytree:

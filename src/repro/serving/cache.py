@@ -103,6 +103,9 @@ class PagedKVCache:
         self.allocator = BlockAllocator(num_blocks)
         self.tables = np.zeros((slots, max_blocks_per_seq), np.int32)
         self.num_mapped = np.zeros((slots,), np.int64)  # logical blocks mapped
+        # logical blocks [0, released) were freed back after sliding-window
+        # expiry (release_expired); their table entries read the null block
+        self.released = np.zeros((slots,), np.int64)
 
     # ------------------------------------------------------------ queries
     @property
@@ -114,7 +117,8 @@ class PagedKVCache:
         return self.allocator.num_free
 
     def blocks_for(self, lane: int) -> "list[int]":
-        return self.tables[lane, : self.num_mapped[lane]].tolist()
+        """Physical blocks the lane still holds (released entries excluded)."""
+        return [int(b) for b in self.tables[lane, : self.num_mapped[lane]] if b]
 
     def blocks_needed(self, lane: int, upto_pos: int) -> int:
         """Additional blocks lane needs so position `upto_pos` is backed."""
@@ -143,9 +147,42 @@ class PagedKVCache:
     def free_lane(self, lane: int) -> None:
         n = int(self.num_mapped[lane])
         if n:
-            self.allocator.free(self.tables[lane, :n].tolist())
+            # skip entries already zeroed by release_expired
+            live = [int(b) for b in self.tables[lane, :n] if b]
+            if live:
+                self.allocator.free(live)
         self.tables[lane, :] = 0
         self.num_mapped[lane] = 0
+        self.released[lane] = 0
+
+    def release_expired(self, lane: int, pos: int, horizon: int) -> int:
+        """Free the lane's blocks that fell wholly behind the sliding-window
+        horizon: with the next query at position `pos`, the oldest visible
+        position is pos - horizon + 1, so logical block b is dead once
+        (b+1)*block_size <= pos - horizon + 1 — for this query and every
+        later one (positions only grow).  Table entries are zeroed (reads
+        land on the null block, already hidden by the window mask) and the
+        physical blocks go back to the allocator, so blocks_in_use plateaus
+        at ~horizon/block_size per lane instead of growing with context.
+
+        Only valid when EVERY layer's mask has expired the blocks — the
+        caller (engine) gates on `transformer.window_horizon`.  Returns the
+        number of blocks freed.
+        """
+        if horizon < 1:
+            raise ValueError("horizon >= 1")
+        bs = self.cfg.block_size
+        expire_end = min(max(0, pos - horizon + 1) // bs,
+                         int(self.num_mapped[lane]))
+        start = int(self.released[lane])
+        if expire_end <= start:
+            return 0
+        blocks = [int(b) for b in self.tables[lane, start:expire_end] if b]
+        if blocks:
+            self.allocator.free(blocks)
+        self.tables[lane, start:expire_end] = 0
+        self.released[lane] = expire_end
+        return len(blocks)
 
     def defragment(self) -> np.ndarray:
         """Compact live blocks to the low end of the pool.
@@ -159,7 +196,7 @@ class PagedKVCache:
         nb = self.cfg.num_blocks
         live: list[int] = [0]                        # null block stays put
         for lane in range(self.slots):
-            live.extend(self.tables[lane, : self.num_mapped[lane]].tolist())
+            live.extend(self.blocks_for(lane))       # skips released (0) slots
         live_set = set(live)
         dead = [b for b in range(nb) if b not in live_set]
         perm = np.asarray(live + dead, np.int32)

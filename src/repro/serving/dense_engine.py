@@ -133,6 +133,19 @@ class DenseServingEngine:
         prefill_tokens = self._admit()
         active = [l for l in self.lanes if l.request_id is not None]
         if not active:
+            if prefill_tokens:
+                # every admitted request finished on its prefill-sampled
+                # token (max_new=1 / instant eos): still record the burst,
+                # or flatness_cov() under-reports exactly the spikes this
+                # engine is the baseline for
+                self.metrics.append({
+                    "step": len(self.metrics),
+                    "tokens": prefill_tokens,
+                    "prefill_tokens": prefill_tokens,
+                    "decode_tokens": 0,
+                    "queue_depth": len(self._queue),
+                })
+                return True
             return False
         toks = np.zeros((self.serve.slots, 1), np.int32)
         for i, lane in enumerate(self.lanes):

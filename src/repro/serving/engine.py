@@ -55,6 +55,11 @@ class ServeConfig:
                                      # threads through prefill AND decode, so
                                      # "kernel" streams every projection
                                      # through the GPP Pallas matmul
+    paged_attn_kernel: str | None = None  # override cfg.paged_attn_kernel:
+                                     # auto | pallas | interpret | ref — the
+                                     # paged READ path ("pallas" streams KV
+                                     # blocks through the VMEM-ring kernel
+                                     # instead of gathering pools)
     seed: int = 0                  # PRNG root for temperature sampling;
                                    # per-token keys fold in (rid, token_idx)
     # paged-KV knobs (0 = derive from the ModelConfig serving defaults)
@@ -89,6 +94,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig):
         if serve.dense_kernel is not None:
             cfg = cfg.with_(dense_kernel=serve.dense_kernel)
+        if serve.paged_attn_kernel is not None:
+            cfg = cfg.with_(paged_attn_kernel=serve.paged_attn_kernel)
         if not tf.supports_paged(cfg):
             raise ValueError(
                 f"{cfg.name} has recurrent/cross blocks; paged serving "
@@ -119,6 +126,13 @@ class ServingEngine:
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
         self._kv_token_bytes = self._kv_bytes_per_token(specs)
         self._param_bytes = cfg.active_params() * cfg.jdtype.itemsize
+        # resolved paged-attention read path ("ref" gathers pools, else the
+        # streaming kernel) — recorded so benchmarks can attribute bytes
+        from repro.kernels.ops import resolve_paged_attn_mode
+        self.paged_attn_mode = resolve_paged_attn_mode(cfg.paged_attn_kernel)
+        # sliding-window block reclamation: finite only when every layer is
+        # windowed (tables are shared across layers) — see window_horizon
+        self.window_horizon = tf.window_horizon(cfg)
 
         # trace_counts increments when jax TRACES (= compiles) a step fn —
         # the re-jit regression tests assert it stays at {1, 1} across
@@ -203,6 +217,15 @@ class ServingEngine:
             return False
         prefill_tokens = decode_tokens = 0
         read_tokens = 0
+        # per-call attention-read accounting: the gather path materializes
+        # every participant's full (MB*bs) logical sequence in HBM; the
+        # streaming kernel only moves each participant's LIVE blocks through
+        # VMEM (unmapped/released entries re-read the hot null block).
+        attn_rows_gather = attn_rows_stream = 0
+        mb_rows = self.kv.cfg.max_blocks_per_seq * self.block_size
+
+        def _live_rows(lane: int) -> int:
+            return len(self.kv.blocks_for(lane)) * self.block_size
 
         if plan.prefill:
             w = plan.prefill
@@ -214,6 +237,12 @@ class ServingEngine:
                 w.start_pos, w.last_idx)
             prefill_tokens = len(w.tokens)
             read_tokens += w.start_pos + len(w.tokens)
+            attn_rows_gather += mb_rows
+            attn_rows_stream += _live_rows(w.lane)
+            if self.window_horizon and w.real_tokens:
+                self.kv.release_expired(
+                    w.lane, w.start_pos + w.real_tokens - 1,
+                    self.window_horizon)
             if w.final:
                 tok = self._sample(logits[0], req)
                 req.produced.append(tok)
@@ -235,12 +264,17 @@ class ServingEngine:
                 self.params, self.caches, jnp.asarray(toks),
                 jnp.asarray(self.kv.tables), jnp.asarray(positions),
                 jnp.asarray(active))
+            attn_rows_gather += slots * mb_rows
+            attn_rows_stream += sum(_live_rows(l) for l in range(slots))
             logits_np = np.asarray(logits, np.float32)
             for lane in plan.decode_lanes:
                 req = self.scheduler.request_at(lane)
                 req.decode_pos += 1
                 tok = self._sample(logits_np[lane, 0], req)
                 req.produced.append(tok)
+                if self.window_horizon:
+                    self.kv.release_expired(lane, req.decode_pos,
+                                            self.window_horizon)
                 self._maybe_finish(lane, tok)
             decode_tokens = len(plan.decode_lanes)
 
@@ -263,6 +297,16 @@ class ServingEngine:
             "hbm_bytes": (self._param_bytes
                           + tokens * self._kv_token_bytes
                           + read_tokens * self._kv_token_bytes),
+            # attention-read traffic this step, per read-path:
+            # gather = HBM bytes MATERIALIZED by `_paged_gather` (every
+            # participant's full MB*bs logical sequence, per layer);
+            # stream = bytes the Pallas kernel DMAs through the VMEM ring —
+            # it skips blocks outside each lane's visible range, so this is
+            # each participant's LIVE blocks (approximate across layers:
+            # window layers skip expired blocks even when a full-attention
+            # layer in the same model still reads them)
+            "attn_bytes_gather": attn_rows_gather * self._kv_token_bytes,
+            "attn_bytes_stream": attn_rows_stream * self._kv_token_bytes,
         })
         return True
 

@@ -223,6 +223,8 @@ class ChunkedPrefillScheduler:
             req.prefill_pos = start + self.chunk
         if prefill is None and not decode:
             return None
-        decode = [l for l in decode if l in self.running]  # late victims
+        # no victim re-filter needed: requests are visited oldest-first and
+        # victims are strictly younger than the requester, so a lane already
+        # planned can never have been preempted while planning
         return StepPlan(prefill=prefill, decode_lanes=tuple(decode),
                         preempted=tuple(preempted))

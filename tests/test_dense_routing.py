@@ -514,3 +514,46 @@ class TestTimingCache:
         tc2 = TimingCache.from_bench_json(str(path))
         assert len(tc2) == 1
         assert tc2.effective_rates() == tc.effective_rates()
+
+
+class TestTimingProvenance:
+    """measured_on tags: compiled-run samples outrank host ones."""
+
+    def test_compiled_samples_preferred(self):
+        tc = TimingCache()
+        # host loop says the link is slow (deep ring)...
+        tc.record(block_bytes=1e6, compute_flops=1e9,
+                  t_dma=1e-2, t_compute=1e-6, measured_on="host")
+        # ...the compiled run says compute is the bottleneck (shallow ring)
+        tc.record(block_bytes=1e6, compute_flops=1e9,
+                  t_dma=1e-6, t_compute=1e-2, measured_on="compiled")
+        fps, bps = tc.effective_rates()
+        assert bps == pytest.approx(1e6 / 1e-6)     # compiled sample only
+        assert fps == pytest.approx(1e9 / 1e-2)
+        shallow = plan_matmul_tiles(8, 4096, 8192, timing=tc)
+        assert shallow.num_bufs == 2                # compiled verdict wins
+
+    def test_host_only_cache_unchanged(self):
+        tc = TimingCache()
+        tc.record(block_bytes=1e6, compute_flops=1e9,
+                  t_dma=1e-3, t_compute=1e-3)       # default: host
+        assert tc.samples[0].measured_on == "host"
+        fps, bps = tc.effective_rates()
+        assert bps == pytest.approx(1e9)
+
+    def test_bad_provenance_rejected(self):
+        with pytest.raises(ValueError):
+            TimingCache().record(block_bytes=1e6, compute_flops=1e9,
+                                 t_dma=1e-3, t_compute=1e-3,
+                                 measured_on="gpu-ish")
+
+    def test_json_roundtrip_preserves_and_defaults_provenance(self):
+        tc = TimingCache()
+        tc.record(block_bytes=1e6, compute_flops=1e9, t_dma=1e-3,
+                  t_compute=1e-3, measured_on="compiled")
+        tc2 = TimingCache.from_json(tc.to_json())
+        assert tc2.samples[0].measured_on == "compiled"
+        # pre-provenance records (no measured_on key) load as host samples
+        legacy = [{"block_bytes": 1e6, "compute_flops": 1e9,
+                   "t_dma": 1e-3, "t_compute": 1e-3}]
+        assert TimingCache.from_json(legacy).samples[0].measured_on == "host"

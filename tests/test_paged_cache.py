@@ -101,3 +101,60 @@ class TestPagedKVCache:
         # allocator reflects the compaction
         assert kv.blocks_in_use == 3
         assert kv.ensure(1, 31)               # all 8 remaining blocks fit
+
+
+class TestWindowReclamation:
+    """release_expired: blocks wholly behind the sliding-window horizon go
+    back to the allocator; the zeroed table entries read the (masked) null
+    block and every other cache operation tolerates them."""
+
+    def kv(self, num_blocks=16, slots=2, bs=4, mb=8):
+        return PagedKVCache(slots=slots, num_blocks=num_blocks, block_size=bs,
+                            max_blocks_per_seq=mb)
+
+    def test_expired_blocks_freed_and_zeroed(self):
+        kv = self.kv()
+        kv.ensure(0, 19)                      # blocks 0..4 mapped (bs=4)
+        assert kv.blocks_in_use == 5
+        # horizon 8, next query at 19: visible start = 12 -> blocks 0..2 dead
+        freed = kv.release_expired(0, 19, 8)
+        assert freed == 3
+        assert kv.blocks_in_use == 2
+        assert (kv.tables[0, :3] == 0).all() and (kv.tables[0, 3:5] != 0).all()
+        # monotone: calling again at the same position frees nothing
+        assert kv.release_expired(0, 19, 8) == 0
+
+    def test_plateau_under_decode_growth(self):
+        """Mapping ahead while releasing behind holds live blocks constant."""
+        kv = self.kv(num_blocks=6, mb=32)     # 5 allocatable, 128-token table
+        horizon, bs = 8, 4
+        for pos in range(0, 100):
+            assert kv.ensure(0, pos), f"pool dry at pos {pos}"
+            kv.release_expired(0, pos, horizon)
+            assert kv.blocks_in_use <= 3      # ceil(8/4) + the write block
+        assert kv.num_mapped[0] == 25         # logical high-water keeps growing
+
+    def test_free_lane_and_blocks_needed_after_release(self):
+        kv = self.kv()
+        kv.ensure(0, 19)
+        kv.release_expired(0, 19, 8)
+        assert kv.blocks_needed(0, 23) == 1   # high-water advances normally
+        kv.free_lane(0)                       # must skip the zeroed entries
+        assert kv.blocks_in_use == 0
+        assert kv.released[0] == 0
+
+    def test_defragment_after_release(self):
+        kv = self.kv(slots=2)
+        kv.ensure(0, 19)
+        kv.ensure(1, 7)
+        kv.release_expired(0, 19, 8)
+        pool = np.arange(16)
+        before = {l: [pool[b] for b in kv.blocks_for(l)] for l in (0, 1)}
+        new_pool = pool[kv.defragment()]
+        after = {l: [new_pool[b] for b in kv.blocks_for(l)] for l in (0, 1)}
+        assert before == after
+        assert kv.blocks_in_use == 4
+
+    def test_bad_horizon_rejected(self):
+        with pytest.raises(ValueError):
+            self.kv().release_expired(0, 10, 0)

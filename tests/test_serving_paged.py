@@ -298,3 +298,83 @@ class TestEngineSelection:
                 "hbm_bytes"}
         assert keys <= set(eng.metrics[0])
         assert all(m["hbm_bytes"] > 0 for m in eng.metrics)
+
+
+class TestWindowReclamation:
+    """Sliding-window block reclamation: an all-window (gemma3-local-style)
+    stack frees blocks that fall behind the window, so blocks_in_use
+    plateaus instead of growing with context — without changing outputs."""
+
+    @pytest.fixture(scope="class")
+    def allwin(self):
+        cfg = registry.get_config("gemma3-12b", smoke=True).with_(
+            pattern=("dense:window",) * 6)    # drop the global layers
+        return cfg, tf.init_params(cfg, jax.random.PRNGKey(0))
+
+    def test_blocks_plateau(self, allwin):
+        cfg, params = allwin
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=64, block_size=8, prefill_chunk=8))
+        assert eng.window_horizon == cfg.window_size == 16
+        rid = eng.submit(list(range(1, 9)), max_new_tokens=40)
+        out = eng.run()[rid]
+        assert len(out) == 40
+        peak = max(m["blocks_in_use"] for m in eng.metrics)
+        # 48-token context = 6 blocks unreclaimed; window 16 needs <= 3 live
+        # (2 visible + the write block)
+        assert peak <= 3
+
+    def test_outputs_match_dense_engine(self, allwin):
+        """Reclamation must be invisible: the dense engine's ring-buffer
+        window cache is the oracle."""
+        cfg, params = allwin
+        paged = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=64, block_size=8, prefill_chunk=16))
+        dense = DenseServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
+        prompts = _prompts(cfg, 4, (4, 9, 13, 21))
+        pr = [paged.submit(p, max_new_tokens=20) for p in prompts]
+        dr = [dense.submit(p, max_new_tokens=20) for p in prompts]
+        pres, dres = paged.run(), dense.run()
+        assert [pres[a] for a in pr] == [dres[b] for b in dr]
+        assert any(m["blocks_in_use"] for m in paged.metrics)
+
+    def test_full_attention_layer_disables_reclamation(self, setups):
+        """gemma3 proper keeps its global layers -> shared tables cannot be
+        reclaimed; qwen (no window at all) likewise."""
+        for arch in ("gemma3-12b", "qwen1.5-0.5b"):
+            cfg, params = setups[arch]
+            eng = ServingEngine(cfg, params, ServeConfig(slots=1, max_len=64))
+            assert eng.window_horizon is None
+
+
+class TestAttnReadMetrics:
+    def test_gather_vs_stream_bytes_exported(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=64, block_size=8, prefill_chunk=16))
+        eng.submit([1, 2, 3, 4, 5], max_new_tokens=4)
+        eng.run()
+        assert eng.paged_attn_mode in ("ref", "pallas", "interpret")
+        for m in eng.metrics:
+            assert m["attn_bytes_gather"] >= m["attn_bytes_stream"] > 0
+
+    def test_paged_attn_kernel_override_threads_through(self, setups):
+        """ServeConfig.paged_attn_kernel overrides cfg, token streams are
+        unchanged, and the two jitted step shapes stay at two."""
+        cfg, params = setups["qwen1.5-0.5b"]
+        prompts = _prompts(cfg, 3, (4, 9, 13))
+
+        def run(mode):
+            eng = ServingEngine(cfg, params, ServeConfig(
+                slots=2, max_len=64, block_size=8, prefill_chunk=16,
+                paged_attn_kernel=mode))
+            rids = [eng.submit(p, max_new_tokens=4) for p in prompts]
+            res = eng.run()
+            return [res[r] for r in rids], eng
+
+        ref_streams, ref_eng = run("ref")
+        ker_streams, ker_eng = run("interpret")
+        assert ref_eng.paged_attn_mode == "ref"
+        assert ker_eng.paged_attn_mode == "interpret"
+        assert ker_streams == ref_streams
+        assert ker_eng.trace_counts == {"prefill_chunk": 1, "decode": 1}
