@@ -601,6 +601,92 @@ def bench_serving_paged_attn_gather_vs_kernel():
         })
 
 
+def bench_serving_prefix_reuse():
+    """Shared-prefix KV reuse (serving/prefix.py) on a multi-turn trace:
+    every conversation opens with the same system prompt, and each second
+    turn replays the full first turn plus a follow-up — the redundant
+    re-prefill the radix index exists to eliminate.
+
+    Headlines: prefill HBM bytes (KV writes for every prefilled chunk token
+    + one weight stream per prefill-carrying step) and tokens/sec, with vs
+    without sharing, at TOKEN-IDENTICAL outputs (asserted).  With sharing,
+    matched prefix blocks are mapped via the block tables instead of
+    recomputed, so the with-sharing trace must show strictly fewer prefill
+    bytes at equal output."""
+    import jax
+    import numpy as np
+    from repro.models import registry
+    from repro.models import transformer as tf
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    SLOTS, MAX_LEN, USERS, MAX_NEW = 2, 128, 4, 6
+    system = list(range(200, 232))          # 32-token shared system prompt
+
+    def trace(prefix):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=SLOTS, max_len=MAX_LEN, prefix_cache=prefix))
+        # warm-up: compile both step shapes outside the timed region; the
+        # second prompt overlaps the first so a COW tail fork (and its
+        # jitted pool-copy) also compiles before timing starts
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run()
+        eng.submit([1, 2, 3, 5, 6], max_new_tokens=2)
+        eng.run()
+        base_steps = len(eng.metrics)
+        rng = np.random.default_rng(0)
+        streams = []
+        t0 = time.perf_counter()
+        turn1 = {}
+        for u in range(USERS):              # turn 1: shared system prompt
+            p = system + rng.integers(0, cfg.vocab_size, size=6).tolist()
+            rid = eng.submit(p, max_new_tokens=MAX_NEW)
+            eng.run()
+            turn1[u] = (p, eng.result(rid))
+            streams.append(eng.result(rid))
+        for u in range(USERS):              # turn 2: full history replayed
+            p1, out1 = turn1[u]
+            p = p1 + out1 + rng.integers(0, cfg.vocab_size, size=4).tolist()
+            rid = eng.submit(p, max_new_tokens=MAX_NEW)
+            eng.run()
+            streams.append(eng.result(rid))
+        dt = time.perf_counter() - t0
+        ms = eng.metrics[base_steps:]
+        prefill_bytes = sum(
+            m["prefill_tokens"] * eng._kv_token_bytes
+            + (eng._param_bytes if m["prefill_tokens"] else 0)
+            for m in ms)
+        hit_tokens = sum(m["prefix_hit_tokens"] for m in ms)
+        tokens = sum(len(s) for s in streams)
+        return streams, tokens / dt, prefill_bytes, hit_tokens, eng
+
+    cold_streams, tps_cold, bytes_cold, _, _ = trace(False)
+    warm_streams, tps_warm, bytes_warm, hit_tokens, eng = trace(True)
+    assert warm_streams == cold_streams, "prefix sharing changed outputs"
+    assert hit_tokens > 0, "multi-turn trace produced no cache hits"
+    assert bytes_warm < bytes_cold, \
+        "sharing must strictly reduce prefill HBM bytes at equal output"
+    _record_serving(
+        "serving_prefix_reuse", 0.0,
+        f"prefill_bytes_shared={bytes_warm:.2e}_vs_cold={bytes_cold:.2e}"
+        f"_({bytes_cold / bytes_warm:.2f}x_fewer)_tok/s={tps_warm:.0f}"
+        f"vs{tps_cold:.0f}_hit_tokens={hit_tokens}"
+        f"_hit_rate={eng.prefix.hit_rate():.2f}",
+        extra={
+            "prefill_hbm_bytes_shared": bytes_warm,
+            "prefill_hbm_bytes_cold": bytes_cold,
+            "prefill_bytes_reduction": round(bytes_cold / bytes_warm, 3),
+            "tokens_per_s_shared": round(tps_warm, 1),
+            "tokens_per_s_cold": round(tps_cold, 1),
+            "prefix_hit_tokens": hit_tokens,
+            "prefix_hit_rate": round(eng.prefix.hit_rate(), 3),
+            "outputs_token_identical": True,
+            "slots": SLOTS, "max_len": MAX_LEN, "users": USERS,
+            "max_new": MAX_NEW, "system_prompt_tokens": len(system),
+        })
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     try:
@@ -618,6 +704,7 @@ def main() -> None:
         bench_serving_paged_vs_dense()
         bench_serving_step_metrics()
         bench_serving_paged_attn_gather_vs_kernel()
+        bench_serving_prefix_reuse()
         bench_streamer_modes()
     finally:
         # keep the partial perf record even if one benchmark dies mid-run

@@ -37,3 +37,35 @@ gather, kernel = run("ref"), run("interpret")
 assert gather == kernel, (gather, kernel)
 print(f"paged-attention parity OK (gather == kernel): {kernel}")
 PY
+echo "--- prefix-cache smoke (shared system prompt, parity vs off) ---"
+python - <<'PY'
+import jax, numpy as np
+from repro.models import registry, transformer as tf
+from repro.serving import ServeConfig, ServingEngine
+
+cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+system = list(range(100, 124))            # 24-token shared system prompt
+prompts = [system + [7, 8], system + [9], system + [11, 12, 13]]
+
+def run(prefix):
+    eng = ServingEngine(cfg, params, ServeConfig(
+        slots=2, max_len=64, block_size=8, prefill_chunk=8,
+        prefix_cache=prefix))
+    outs = []
+    for p in prompts:                     # sequential: later turns can hit
+        rid = eng.submit(p, max_new_tokens=4)
+        eng.run()
+        outs.append(eng.result(rid))
+    return outs, eng
+
+cold, _ = run(False)
+warm, eng = run(True)
+assert warm == cold, (warm, cold)
+hit_rate = eng.prefix.hit_rate()
+hit_tokens = eng.prefix.hit_tokens
+assert hit_rate > 0 and hit_tokens > 0, (hit_rate, hit_tokens)
+eng.kv.check_invariants(eng.prefix.held_blocks())
+print(f"prefix-cache parity OK (shared == cold), hit_rate={hit_rate:.2f} "
+      f"hit_tokens={hit_tokens}")
+PY

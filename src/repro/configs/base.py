@@ -81,6 +81,22 @@ class ModelConfig:
                                      # chunked-prefill scheduler; 0 = auto
                                      # (slots + 2 blocks — one chunk of
                                      # prefill riding along with full decode)
+    prefix_cache: bool = False       # paged serving: radix-tree shared-
+                                     # prefix KV reuse (serving/prefix.py) —
+                                     # admission maps previously computed
+                                     # prompt-prefix blocks into the lane's
+                                     # tables and prefill skips the matched
+                                     # chunks; cached blocks are refcounted,
+                                     # appended into via copy-on-write
+                                     # fork_block, and LRU-evicted under
+                                     # block pressure before any preemption.
+                                     # ServeConfig.prefix_cache overrides.
+    prefix_cache_blocks: int = 0     # cap on block references the prefix
+                                     # index may pin per deployment (0 =
+                                     # unbounded; pressure-driven eviction
+                                     # applies either way).
+                                     # ServeConfig.prefix_cache_blocks
+                                     # overrides.
 
     @property
     def jdtype(self):

@@ -254,7 +254,7 @@ def plan_stream(
 # ---------------------------------------------------------------------------
 
 def plan_serve_chunk(*, token_budget: int, decode_lanes: int,
-                     block_size: int) -> int:
+                     block_size: int, cached_tokens: int = 0) -> int:
     """Prefill chunk size for the paged serving engine (serving/scheduler.py).
 
     Same math as `plan_stream`'s chunking, one level up: a prompt's prefill
@@ -265,12 +265,22 @@ def plan_serve_chunk(*, token_budget: int, decode_lanes: int,
     largest KV-block multiple that keeps the step at or under the flat
     `token_budget` target — the per-step analogue of "each compute slot
     carries ~1/ratio of a block".
+
+    cached_tokens: expected per-admission prefix-cache hit depth
+    (serving/prefix.py).  Cached tokens enter a request's context without
+    compute or HBM writes — a prompt's real prefill burst shrinks by that
+    much, so the budget they would have burned is handed back to the chunk:
+    a deployment with a known steady hit depth can carry a larger chunk at
+    the same real per-step traffic, finishing cold prompts sooner without
+    un-flattening the stream.
     """
     if block_size < 1:
         raise ValueError("block_size >= 1")
     if decode_lanes < 0:
         raise ValueError("decode_lanes >= 0")
-    spare = max(block_size, token_budget - decode_lanes)
+    if cached_tokens < 0:
+        raise ValueError("cached_tokens >= 0")
+    spare = max(block_size, token_budget + cached_tokens - decode_lanes)
     return max(block_size, (spare // block_size) * block_size)
 
 

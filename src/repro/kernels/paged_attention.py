@@ -49,8 +49,20 @@ One kernel body serves the whole family:
 Queries arrive pre-scaled and pre-transposed as (B, KVH, rep*S, dk) so the
 kernel body is nothing but DMA waits, two batched dot_generals, and the
 online-softmax update — no in-kernel transposes.  Decode is S=1 with
-per-lane positions; a prefill chunk is B=1, S=chunk with a block-aligned
-start position; both compile to the same kernel.
+per-lane positions; a prefill chunk is B=1, S=chunk with ANY start position
+(prefix-cache hits resume prefill mid-block — the visibility predicate and
+per-(row, slot) mask are position-exact, never block-aligned-assuming);
+both compile to the same kernel.
+
+Shared-prefix aliasing contract: with the prefix cache on, one physical
+block may appear in SEVERAL lanes' tables (refcounted shares of a common
+prompt prefix).  That is safe here by construction — this kernel only ever
+READS the pools (`pl.BlockSpec(memory_space=pl.ANY)` inputs, DMA'd into the
+VMEM ring; the only output is the attention result).  All pool writes live
+in `models.attention._paged_write_span` / `_paged_write_token`, and the
+engine asserts before every write that the target blocks are exclusively
+owned (`PagedKVCache.assert_writable`): shared blocks are read-only until
+`fork_block` copies them out.
 """
 from __future__ import annotations
 
@@ -200,7 +212,8 @@ def paged_attention(
 
     Args:
       q: (B, S, H, dk) queries.  Decode: S == 1 with per-lane positions;
-         prefill chunk: B == 1 with a block-aligned start position.
+         prefill chunk: B == 1 with any (not necessarily block-aligned)
+         start position.
       pool_a / pool_b: shared physical pools, leading dims (nb, bs, ...).
          GQA: k / v with trailing (KVH, hd).  MLA: c_kv (nb, bs, kv_lora) /
          k_rope (nb, bs, rope_dim) with `mla=True` and q already absorbed

@@ -32,6 +32,15 @@ def main(argv=None):
                     help="paged-attention read path: pallas streams KV "
                          "blocks through the VMEM-ring kernel, ref gathers "
                          "pools, interpret runs the kernel on CPU")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="radix-tree shared-prefix KV reuse: admission maps "
+                         "previously computed prompt-prefix blocks into the "
+                         "lane's tables and prefill skips the matched "
+                         "chunks (default: cfg.prefix_cache)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                    help="cap on blocks the prefix index may pin "
+                         "(0 = unbounded; default: cfg.prefix_cache_blocks)")
     args = ap.parse_args(argv)
 
     import jax
@@ -51,7 +60,9 @@ def main(argv=None):
         slots=args.slots, max_len=args.max_len, temperature=args.temperature,
         seed=args.seed, block_size=args.block_size,
         prefill_chunk=args.prefill_chunk,
-        paged_attn_kernel=args.paged_attn)
+        paged_attn_kernel=args.paged_attn,
+        prefix_cache=args.prefix_cache,
+        prefix_cache_blocks=args.prefix_cache_blocks)
     if args.engine == "paged":
         engine = ServingEngine(cfg, params, serve)
     elif args.engine == "dense":
@@ -78,6 +89,12 @@ def main(argv=None):
         print(f"steps={len(engine.metrics)} tokens/step_cov="
               f"{engine.flatness_cov():.3f} peak_blocks={peak_blocks} "
               f"traces={getattr(engine, 'trace_counts', {})}")
+        if getattr(engine, "prefix", None) is not None:
+            hit_toks = sum(m.get("prefix_hit_tokens", 0)
+                           for m in engine.metrics)
+            print(f"prefix_cache: hit_rate={engine.prefix_hit_rate():.2f} "
+                  f"hit_tokens={hit_toks} "
+                  f"blocks_held={engine.prefix.blocks_held}")
     return results
 
 

@@ -400,16 +400,19 @@ def _paged_gather(pool, tables):
     return g.reshape(tables.shape[0], -1, *pool.shape[2:])
 
 
-def _paged_write_blocks(pool, table_row, start_pos, vals):
+def _paged_write_span(pool, table_row, start_pos, vals):
     """Write `vals` (1, S, ...) at absolute positions [start_pos, start_pos+S)
-    of the lane whose table row is `table_row` (1, MB).  Requires start_pos
-    and S to be block-aligned (the engine pads prompts to chunk multiples,
-    chunks are block multiples), so writes are whole physical blocks."""
+    of the lane whose table row is `table_row` (1, MB) — one (block, offset)
+    scatter per token, so start_pos may be ANY token index.  Non-alignment
+    arises from prefix-cache hits: prefill resumes at the matched token
+    count, mid-block when a shared tail block was forked (the lane owns
+    every block the span touches — shared blocks all sit below start_pos;
+    the engine asserts this via `PagedKVCache.assert_writable`)."""
     bs = pool.shape[1]
     S = vals.shape[1]
-    ncb = S // bs
-    blk = jax.lax.dynamic_slice(table_row[0], (start_pos // bs,), (ncb,))
-    return pool.at[blk].set(vals[0].reshape(ncb, bs, *pool.shape[2:]))
+    pos = start_pos + jnp.arange(S, dtype=jnp.int32)
+    blk = jnp.take(table_row[0], pos // bs)
+    return pool.at[blk, pos % bs].set(vals[0])
 
 
 def _paged_write_token(pool, tables, positions, active, vals):
@@ -453,8 +456,8 @@ def gqa_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
     S = x.shape[1]
     positions = start_pos + jnp.arange(S, dtype=jnp.int32)[None]
     q, k, v = gqa_project_qkv(p, c, x, positions)
-    kc = _paged_write_blocks(cache["k"], table_row, start_pos, k)
-    vc = _paged_write_blocks(cache["v"], table_row, start_pos, v)
+    kc = _paged_write_span(cache["k"], table_row, start_pos, k)
+    vc = _paged_write_span(cache["v"], table_row, start_pos, v)
     out = _gqa_paged_attend(c, q, kc, vc, table_row,
                             jnp.reshape(start_pos, (1,)).astype(jnp.int32))
     return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
@@ -510,8 +513,8 @@ def mla_prefill_paged(p, c: AttnConfig, x, cache, table_row, start_pos):
     positions = start_pos + jnp.arange(S, dtype=jnp.int32)[None]
     q = _mla_q(p, c, x, positions)
     c_kv, k_rope = _mla_latent(p, c, x, positions)
-    ckv = _paged_write_blocks(cache["c_kv"], table_row, start_pos, c_kv)
-    kr = _paged_write_blocks(cache["k_rope"], table_row, start_pos, k_rope)
+    ckv = _paged_write_span(cache["c_kv"], table_row, start_pos, c_kv)
+    kr = _paged_write_span(cache["k_rope"], table_row, start_pos, k_rope)
     out = _mla_paged_attend(p, c, q, ckv, kr, table_row,
                             jnp.reshape(start_pos, (1,)).astype(jnp.int32),
                             prefill=True)

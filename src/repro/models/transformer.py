@@ -415,6 +415,67 @@ def supports_paged(cfg: ModelConfig) -> bool:
             and all(k.split(":")[0] in PAGED_BLOCK_KINDS for k in kinds))
 
 
+def layer_reach(cfg: ModelConfig, kind: str) -> str:
+    """Attention reach class of a block kind: "window" for sliding-window
+    layers (bounded lookback), "global" otherwise — the bucketing key for
+    per-layer-group block tables."""
+    return "window" if (kind.endswith(":window") and cfg.window_size) \
+        else "global"
+
+
+def layer_group_keys(cfg: ModelConfig) -> "tuple[str, ...]":
+    """Distinct attention-reach classes across every layer, in first-
+    appearance order.  Each class gets its OWN paged block table + pool id
+    space (`serving.cache.GroupedPagedCache`), so sliding-window layers
+    reclaim expired blocks even when global layers in the same model pin
+    full history — gemma3's 5-local:1-global stack plateaus on the local
+    group while only the global group grows."""
+    kinds = tuple(cfg.prefix_pattern) + tuple(cfg.pattern)
+    keys: "list[str]" = []
+    for k in kinds:
+        r = layer_reach(cfg, k)
+        if r not in keys:
+            keys.append(r)
+    return tuple(keys) or ("global",)
+
+
+def layer_group_index(cfg: ModelConfig, kind: str) -> int:
+    return layer_group_keys(cfg).index(layer_reach(cfg, kind))
+
+
+def group_horizons(cfg: ModelConfig) -> "tuple[int | None, ...]":
+    """Per layer group: the oldest position its layers can still attend to,
+    relative to the current query (None = unbounded).  A group's blocks
+    wholly behind its horizon are reclaimable — per group, unlike
+    `window_horizon`, which is the whole-model (shared-table) condition."""
+    return tuple(cfg.window_size if k == "window" else None
+                 for k in layer_group_keys(cfg))
+
+
+def cache_path_group(cfg: ModelConfig, path) -> int:
+    """Layer-group index of a paged-cache pytree leaf, from its tree path
+    (the layout defined by `paged_cache_specs`): "prefix"/i leaves follow
+    prefix_pattern[i], "blocks"/"b{i}" leaves follow pattern[i].  Engine-
+    side pool permutes (defragment) and COW block copies use this to apply
+    each group's remap to exactly its own layers' pools."""
+    for i, k in enumerate(path):
+        key = getattr(k, "key", None)
+        if key == "prefix":
+            return layer_group_index(cfg, cfg.prefix_pattern[path[i + 1].idx])
+        if key == "blocks":
+            return layer_group_index(cfg, cfg.pattern[int(path[i + 1].key[1:])])
+    raise ValueError(f"not a paged-cache leaf path: {path}")
+
+
+def _group_table(cfg: ModelConfig, kind: str, tables):
+    """Resolve a layer's block table from per-group tables (tuple/list, one
+    per `layer_group_keys` entry) or a single shared table (back-compat:
+    models whose layers all share one reach)."""
+    if isinstance(tables, (tuple, list)):
+        return tables[layer_group_index(cfg, kind)]
+    return tables
+
+
 def window_horizon(cfg: ModelConfig) -> "int | None":
     """Oldest position any layer can still attend to, relative to the
     current query position — the block-reclamation horizon.
@@ -463,12 +524,13 @@ def paged_cache_specs(cfg: ModelConfig, num_blocks: int, block_size: int) -> Pyt
 def _block_prefill_paged(cfg, kind, p, x, cache, table_row, start_pos):
     ac = _attn_cfg(cfg, kind)
     base = kind.split(":")[0]
+    row = _group_table(cfg, kind, table_row)
     h = rmsnorm(p["ln1"], x)
     if ac.is_mla:
-        h, cache = attn.mla_prefill_paged(p["attn"], ac, h, cache, table_row,
+        h, cache = attn.mla_prefill_paged(p["attn"], ac, h, cache, row,
                                           start_pos)
     else:
-        h, cache = attn.gqa_prefill_paged(p["attn"], ac, h, cache, table_row,
+        h, cache = attn.gqa_prefill_paged(p["attn"], ac, h, cache, row,
                                           start_pos)
     x = x + h
     h = rmsnorm(p["ln2"], x)
@@ -482,12 +544,13 @@ def _block_prefill_paged(cfg, kind, p, x, cache, table_row, start_pos):
 def _block_decode_paged(cfg, kind, p, x, cache, tables, positions, active):
     ac = _attn_cfg(cfg, kind)
     base = kind.split(":")[0]
+    tb = _group_table(cfg, kind, tables)
     h = rmsnorm(p["ln1"], x)
     if ac.is_mla:
-        h, cache = attn.mla_decode_paged(p["attn"], ac, h, cache, tables,
+        h, cache = attn.mla_decode_paged(p["attn"], ac, h, cache, tb,
                                          positions, active)
     else:
-        h, cache = attn.gqa_decode_paged(p["attn"], ac, h, cache, tables,
+        h, cache = attn.gqa_decode_paged(p["attn"], ac, h, cache, tb,
                                          positions, active)
     x = x + h
     h = rmsnorm(p["ln2"], x)
@@ -518,9 +581,14 @@ def prefill_chunk(params: Pytree, cfg: ModelConfig, tokens, caches,
     tokens: (1, chunk) — the chunk's token ids (pads beyond the real prompt
       are harmless: their pool slots are overwritten by decode writes at the
       same absolute positions, and the causal mask hides them until then).
-    table_row: (1, max_blocks) block table of the lane being prefilled.
-    start_pos: traced scalar — absolute position of tokens[0]; a chunk
-      multiple, hence block-aligned.
+    table_row: the lane's block table(s) — a (1, max_blocks) array, or a
+      tuple of one such array per layer group (`layer_group_keys`) when
+      window and global layers keep separate tables.
+    start_pos: traced scalar — absolute position of tokens[0].  ANY token
+      index: with a prefix-cache hit the first chunk starts at the matched
+      token count, mid-block when a shared tail block was forked; the paged
+      KV write scatters per token and the read masks are position-exact, so
+      no alignment is required.
     last_idx: traced scalar — chunk-local index whose logits the engine
       samples from (the prompt's true last token on the final chunk; ignored
       on earlier chunks).
@@ -560,7 +628,8 @@ def decode_step_paged(params: Pytree, cfg: ModelConfig, tokens, caches,
                       tables, positions, active):
     """One batched decode step over the paged pools.
 
-    tokens: (slots, 1); tables: (slots, max_blocks); positions: (slots,) —
+    tokens: (slots, 1); tables: (slots, max_blocks) — or a tuple of one
+    such array per layer group (`layer_group_keys`); positions: (slots,) —
     PER-LANE absolute positions, so heterogeneous lanes decode in ONE call
     (the seed engine ran one call per distinct position); active: (slots,)
     bool — inactive lanes write to the null block and their logits are

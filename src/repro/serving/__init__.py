@@ -19,12 +19,21 @@ whole-prompt prefill is the burst and decode steps are the compute slots:
 
 Modules:
   cache.py      fixed-size-block paged KV cache: allocator, per-lane block
-                tables, defragmentation; capacity is `num_blocks`, shared,
-                not `slots x max_len` reserved per lane
-  scheduler.py  token-budget continuous-batching scheduler: FCFS admission,
-                prefill split into chunks interleaved with decode,
-                preemption-by-block-pressure with recompute resume
-  engine.py     ServingEngine — composes the two; exactly two jitted step
+                tables, REFCOUNTED sharing (share_blocks / copy-on-write
+                fork_block), defragmentation; GroupedPagedCache stacks one
+                cache per layer group (global vs sliding-window reach) so
+                windowed layers reclaim expired blocks independently;
+                capacity is `num_blocks`, shared, not `slots x max_len`
+                reserved per lane
+  prefix.py     PrefixCache — radix-tree shared-prefix KV index: admission
+                maps previously computed prompt-prefix blocks straight into
+                a lane's tables (prefill skips those chunks), LRU eviction
+                of zero-lane-ref leaves under block pressure
+  scheduler.py  token-budget continuous-batching scheduler: FCFS admission
+                (+ prefix-cache probe), prefill split into chunks
+                interleaved with decode, preemption-by-block-pressure with
+                recompute resume (prefix eviction runs first)
+  engine.py     ServingEngine — composes the three; exactly two jitted step
                 shapes (chunked-prefill and pure-decode); per-step metrics
   dense_engine.py  the seed dense-cache engine, kept as the recurrent-arch
                 fallback and the benchmark/parity baseline
@@ -33,7 +42,11 @@ Modules:
 comes from `core.schedule.plan_serve_chunk`, the same flatness math that
 sizes the kernels' DMA rings.
 """
+from repro.serving.cache import GroupedPagedCache, PagedKVCache
 from repro.serving.dense_engine import DenseServingEngine
 from repro.serving.engine import ServeConfig, ServingEngine, make_engine
+from repro.serving.prefix import PrefixCache, PrefixHit
 
-__all__ = ["DenseServingEngine", "ServeConfig", "ServingEngine", "make_engine"]
+__all__ = ["DenseServingEngine", "GroupedPagedCache", "PagedKVCache",
+           "PrefixCache", "PrefixHit", "ServeConfig", "ServingEngine",
+           "make_engine"]

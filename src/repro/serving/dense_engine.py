@@ -144,6 +144,10 @@ class DenseServingEngine:
                     "prefill_tokens": prefill_tokens,
                     "decode_tokens": 0,
                     "queue_depth": len(self._queue),
+                    # schema parity with the paged engine's prefix-cache
+                    # metrics: the dense engine never shares KV
+                    "prefix_hit_tokens": 0,
+                    "blocks_shared": 0,
                 })
                 return True
             return False
@@ -195,6 +199,8 @@ class DenseServingEngine:
             "prefill_tokens": prefill_tokens,
             "decode_tokens": decode_tokens,
             "queue_depth": len(self._queue),
+            "prefix_hit_tokens": 0,
+            "blocks_shared": 0,
         })
         return True
 

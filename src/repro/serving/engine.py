@@ -1,15 +1,21 @@
 """Paged-KV serving engine: chunked prefill + continuous batching decode.
 
-Composes `serving.cache.PagedKVCache` (fixed-size KV blocks shared across
-lanes, per-lane block tables) with `serving.scheduler.ChunkedPrefillScheduler`
-(FCFS + preemption-by-block-pressure, prefill split into fixed chunks and
-interleaved with decode — the generalized-ping-pong schedule applied to the
-request stream, so per-step token count and HBM traffic stay flat).
+Composes `serving.cache.GroupedPagedCache` (fixed-size KV blocks shared
+across lanes, one block table per layer group — global vs sliding-window
+reach) with `serving.scheduler.ChunkedPrefillScheduler` (FCFS + preemption-
+by-block-pressure, prefill split into fixed chunks and interleaved with
+decode — the generalized-ping-pong schedule applied to the request stream,
+so per-step token count and HBM traffic stay flat), and optionally
+`serving.prefix.PrefixCache` (radix-tree shared-prefix KV reuse: admission
+maps previously computed prompt-prefix blocks straight into the lane's
+tables and prefill skips those chunks entirely — the redundant re-prefill
+bytes never cross HBM).
 
 Exactly TWO step shapes are jit-compiled, independent of prompt lengths:
 
   * `prefill_chunk`: (1, chunk) tokens — one chunk of one lane's (padded)
-    prompt, writing whole KV blocks through the lane's block table;
+    prompt, scattering per-token KV writes through the lane's block tables
+    (per-token because a prefix-cache hit may start a chunk mid-block);
   * `decode_step_paged`: (slots, 1) tokens with PER-LANE position vectors —
     heterogeneous lanes decode in one call (the seed engine ran one call per
     distinct position and re-traced per prompt length).
@@ -17,11 +23,12 @@ Exactly TWO step shapes are jit-compiled, independent of prompt lengths:
 Sampling is deterministic: greedy by default; with temperature > 0 every
 token draw uses a key folded from (ServeConfig.seed, request id, token
 index), so identical request streams reproduce identical outputs regardless
-of lane assignment, step interleaving, or preemption/resume.
+of lane assignment, step interleaving, preemption/resume, or prefix-cache
+hits.
 
-Per-step metrics (tokens, blocks in use, queue depth, projected HBM bytes)
-accumulate in `engine.metrics`; `benchmarks/run.py` records them into
-BENCH_serving.json.
+Per-step metrics (tokens, blocks in use/shared, prefix hit tokens, queue
+depth, projected HBM bytes) accumulate in `engine.metrics`;
+`benchmarks/run.py` records them into BENCH_serving.json.
 
 Recurrent architectures (mamba/xlstm blocks: O(1) state, no paged KV) are
 served by `serving.dense_engine.DenseServingEngine` — see `make_engine`.
@@ -29,6 +36,7 @@ served by `serving.dense_engine.DenseServingEngine` — see `make_engine`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import numpy as np
@@ -39,7 +47,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.schedule import plan_serve_chunk, round_up, tokens_per_step_cov
 from repro.models import transformer as tf
-from repro.serving.cache import PagedKVCache
+from repro.serving.cache import GroupedPagedCache, PagedKVCache
+from repro.serving.prefix import PrefixCache
 from repro.serving.scheduler import ChunkedPrefillScheduler, Request
 
 Pytree = Any
@@ -64,13 +73,34 @@ class ServeConfig:
                                    # per-token keys fold in (rid, token_idx)
     # paged-KV knobs (0 = derive from the ModelConfig serving defaults)
     block_size: int = 0            # tokens per KV block
-    num_blocks: int = 0            # pool size incl. reserved null block 0;
-                                   # 0 = slots*max_len worth (the dense
-                                   # engine's footprint, now SHARED)
+    num_blocks: int = 0            # pool size PER LAYER GROUP incl. reserved
+                                   # null block 0; 0 = slots*max_len worth
+                                   # (the dense engine's footprint, now
+                                   # SHARED across lanes)
     prefill_chunk: int = 0         # tokens per prefill chunk; 0 = planned by
                                    # core.schedule.plan_serve_chunk
     token_budget: int = 0          # flat per-step token target; 0 = cfg /
                                    # slots + 2 blocks
+    # shared-prefix KV reuse (serving/prefix.py); None = cfg.prefix_cache /
+    # cfg.prefix_cache_blocks
+    prefix_cache: "bool | None" = None
+    prefix_cache_blocks: "int | None" = None
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_copy(pool, src, dst):
+    """One COW block copy in a flat (nb, bs, ...) pool.  src/dst are traced
+    scalars, so every pool shape compiles exactly once per process; the
+    pool buffer is DONATED (the engine rebinds self.caches immediately), so
+    on accelerators this lowers to an in-place one-block update instead of
+    materializing a whole new pool per copy."""
+    return pool.at[dst].set(pool[src])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_copy_stacked(pool, src, dst):
+    """Same for stacked (S, nb, bs, ...) superblock pools."""
+    return pool.at[:, dst].set(pool[:, src])
 
 
 def sample_token(serve: ServeConfig, rid: int, token_idx: int,
@@ -117,31 +147,47 @@ class ServingEngine:
         self.chunk = chunk
         self.token_budget = budget
 
-        self.kv = PagedKVCache(slots=serve.slots, num_blocks=num_blocks,
-                               block_size=bs, max_blocks_per_seq=mb)
+        # layers bucketed by attention reach: one block table + block-id
+        # space per group, so `release_expired` frees a windowed group's
+        # blocks while a global group keeps full history
+        self.group_keys = tf.layer_group_keys(cfg)
+        self.group_horizons = tf.group_horizons(cfg)
+        self.kv = GroupedPagedCache(
+            slots=serve.slots, num_blocks=num_blocks, block_size=bs,
+            max_blocks_per_seq=mb, horizons=self.group_horizons)
+
+        prefix_on = (serve.prefix_cache if serve.prefix_cache is not None
+                     else cfg.prefix_cache)
+        prefix_blocks = (serve.prefix_cache_blocks
+                         if serve.prefix_cache_blocks is not None
+                         else cfg.prefix_cache_blocks)
+        self.prefix = (PrefixCache(self.kv, max_blocks=prefix_blocks)
+                       if prefix_on else None)
         self.scheduler = ChunkedPrefillScheduler(
-            self.kv, slots=serve.slots, chunk=chunk)
+            self.kv, slots=serve.slots, chunk=chunk, prefix=self.prefix)
         specs = tf.paged_cache_specs(cfg, num_blocks, bs)
         self.caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
         self._kv_token_bytes = self._kv_bytes_per_token(specs)
+        self._group_token_bytes = self._kv_bytes_by_group(cfg, specs)
         self._param_bytes = cfg.active_params() * cfg.jdtype.itemsize
         # resolved paged-attention read path ("ref" gathers pools, else the
         # streaming kernel) — recorded so benchmarks can attribute bytes
         from repro.kernels.ops import resolve_paged_attn_mode
         self.paged_attn_mode = resolve_paged_attn_mode(cfg.paged_attn_kernel)
-        # sliding-window block reclamation: finite only when every layer is
-        # windowed (tables are shared across layers) — see window_horizon
+        # whole-model reclamation horizon kept for the all-window case and
+        # back-compat introspection; per-group reclamation supersedes it
         self.window_horizon = tf.window_horizon(cfg)
+        self._reclaims = any(h is not None for h in self.group_horizons)
 
         # trace_counts increments when jax TRACES (= compiles) a step fn —
         # the re-jit regression tests assert it stays at {1, 1} across
         # arbitrary prompt-length mixes.
         self.trace_counts = {"prefill_chunk": 0, "decode": 0}
 
-        def _prefill(params, caches, toks, table_row, start_pos, last_idx):
+        def _prefill(params, caches, toks, table_rows, start_pos, last_idx):
             self.trace_counts["prefill_chunk"] += 1
-            return tf.prefill_chunk(params, cfg, toks, caches, table_row,
+            return tf.prefill_chunk(params, cfg, toks, caches, table_rows,
                                     start_pos, last_idx)
 
         def _decode(params, caches, toks, tables, positions, active):
@@ -172,6 +218,23 @@ class ServingEngine:
         jax.tree_util.tree_map_with_path(leaf, specs)
         return total
 
+    @staticmethod
+    def _kv_bytes_by_group(cfg, specs) -> "list[int]":
+        """Per-token KV bytes split by layer group (for per-group read
+        accounting: a window group's live blocks differ from a global
+        group's)."""
+        out = [0] * len(tf.layer_group_keys(cfg))
+
+        def leaf(path, s):
+            stacked = tf.is_stacked_cache_path(path)
+            per_slot = int(np.prod(s.shape[3:] if stacked else s.shape[2:]))
+            layers = s.shape[0] if stacked else 1
+            out[tf.cache_path_group(cfg, path)] += \
+                layers * per_slot * jnp.dtype(s.dtype).itemsize
+
+        jax.tree_util.tree_map_with_path(leaf, specs)
+        return out
+
     # ---------------------------------------------------------------- API
     def submit(self, prompt: "list[int]", max_new_tokens: int = 32) -> int:
         rid = self._next_id
@@ -192,17 +255,74 @@ class ServingEngine:
         """Coefficient of variation of tokens/step (lower = flatter)."""
         return tokens_per_step_cov([m["tokens"] for m in self.metrics])
 
+    def prefix_hit_rate(self) -> float:
+        return self.prefix.hit_rate() if self.prefix else 0.0
+
     # ------------------------------------------------------------ engine
     def _sample(self, logits_row, req: Request) -> int:
         return sample_token(self.serve, req.rid, len(req.produced), logits_row)
+
+    def _tables_jnp(self, lane: "int | None" = None):
+        """Per-group block tables as a jit-stable tuple: the whole (slots,
+        MB) table per group for decode, or one lane's (1, MB) row per group
+        for a prefill chunk."""
+        if lane is None:
+            return tuple(jnp.asarray(g.tables) for g in self.kv.groups)
+        return tuple(jnp.asarray(g.tables[lane][None])
+                     for g in self.kv.groups)
+
+    def _apply_pending_copies(self) -> None:
+        """Drain queued copy-on-write block copies into the device pools —
+        BEFORE any model call of this step, so forked blocks carry their
+        source rows before the lane appends (and before a freed source id
+        can be overwritten by this step's writes)."""
+        if not self.kv.pending_copies:
+            return
+        per_group: "dict[int, list[tuple[int, int]]]" = {}
+        for gi, src, dst in self.kv.pending_copies:
+            per_group.setdefault(gi, []).append((src, dst))
+        self.kv.pending_copies = []
+
+        def apply(path, pool):
+            copies = per_group.get(tf.cache_path_group(self.cfg, path))
+            if not copies:
+                return pool
+            op = (_pool_copy_stacked if tf.is_stacked_cache_path(path)
+                  else _pool_copy)
+            for src, dst in copies:
+                pool = op(pool, np.int32(src), np.int32(dst))
+            return pool
+
+        self.caches = jax.tree_util.tree_map_with_path(apply, self.caches)
+
+    def _prefix_insert(self, lane: int, tokens: np.ndarray) -> None:
+        """Index `tokens` (every position's KV is written for this lane)
+        into the radix tree, adopting the lane's novel blocks.  Called when
+        a lane's prefill completes (its context becomes shareable while it
+        still decodes) and again at finish (context + generated tokens,
+        for multi-turn reuse)."""
+        if self.prefix is None or len(tokens) == 0:
+            return
+        n = -(-len(tokens) // self.block_size)
+        self.prefix.insert(np.asarray(tokens, np.int32),
+                           self.kv.table_snapshot(lane, n))
 
     def _maybe_finish(self, lane: int, tok: int) -> None:
         req = self.scheduler.request_at(lane)
         done = req.remaining <= 0 or (
             self.serve.eos_token is not None and tok == self.serve.eos_token)
         if done:
+            if self.prefix is not None:
+                # KV exists for every fed token: prompt + produced[:-1]
+                # (the final sampled token was never fed back)
+                fed = np.concatenate(
+                    [req.prompt, np.asarray(req.produced[:-1], np.int32)])
+                self._prefix_insert(lane, fed)
             self._results[req.rid] = list(req.produced)
             self.scheduler.finish(lane)
+            if self.prefix is not None:
+                # the lane's refs just dropped: the block cap can now bite
+                self.prefix.enforce_cap()
 
     def step(self) -> bool:
         """One engine step: at most one prefill chunk + one batched decode
@@ -215,37 +335,49 @@ class ServingEngine:
                     f"({self.kv.cfg.num_blocks} blocks of {self.block_size}); "
                     "raise ServeConfig.num_blocks")
             return False
+        # copy-on-write forks queued by admission: copy pool rows before
+        # any write this step
+        self._apply_pending_copies()
         prefill_tokens = decode_tokens = 0
         read_tokens = 0
         # per-call attention-read accounting: the gather path materializes
         # every participant's full (MB*bs) logical sequence in HBM; the
         # streaming kernel only moves each participant's LIVE blocks through
         # VMEM (unmapped/released entries re-read the hot null block).
-        attn_rows_gather = attn_rows_stream = 0
+        attn_bytes_gather = attn_bytes_stream = 0
         mb_rows = self.kv.cfg.max_blocks_per_seq * self.block_size
 
-        def _live_rows(lane: int) -> int:
-            return len(self.kv.blocks_for(lane)) * self.block_size
+        def _stream_bytes(lane: int) -> int:
+            return sum(
+                len(g.blocks_for(lane)) * self.block_size * gb
+                for g, gb in zip(self.kv.groups, self._group_token_bytes))
 
         if plan.prefill:
             w = plan.prefill
             req = self.scheduler.request_at(w.lane)
+            # shared blocks arrive via the tables READ-ONLY; the write span
+            # must be exclusively owned (fork_block upholds this at
+            # admission — assert it before every write)
+            self.kv.assert_writable(w.lane, w.start_pos,
+                                    w.start_pos + len(w.tokens))
             logits, self.caches = self._prefill(
                 self.params, self.caches,
                 jnp.asarray(w.tokens[None]),
-                jnp.asarray(self.kv.tables[w.lane][None]),
+                self._tables_jnp(w.lane),
                 w.start_pos, w.last_idx)
             prefill_tokens = len(w.tokens)
             read_tokens += w.start_pos + len(w.tokens)
-            attn_rows_gather += mb_rows
-            attn_rows_stream += _live_rows(w.lane)
-            if self.window_horizon and w.real_tokens:
+            attn_bytes_gather += mb_rows * self._kv_token_bytes
+            attn_bytes_stream += _stream_bytes(w.lane)
+            if self._reclaims and w.real_tokens:
                 self.kv.release_expired(
-                    w.lane, w.start_pos + w.real_tokens - 1,
-                    self.window_horizon)
+                    w.lane, w.start_pos + w.real_tokens - 1)
             if w.final:
                 tok = self._sample(logits[0], req)
                 req.produced.append(tok)
+                # the lane's full context KV is now written: publish it for
+                # sharing while the lane keeps decoding
+                self._prefix_insert(w.lane, req.context)
                 self.scheduler.to_decode(w.lane)
                 self._maybe_finish(w.lane, tok)
 
@@ -260,21 +392,22 @@ class ServingEngine:
                 positions[lane] = req.decode_pos
                 active[lane] = True
                 read_tokens += req.decode_pos + 1
+                self.kv.assert_writable(lane, req.decode_pos,
+                                        req.decode_pos + 1)
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(toks),
-                jnp.asarray(self.kv.tables), jnp.asarray(positions),
+                self._tables_jnp(), jnp.asarray(positions),
                 jnp.asarray(active))
-            attn_rows_gather += slots * mb_rows
-            attn_rows_stream += sum(_live_rows(l) for l in range(slots))
+            attn_bytes_gather += slots * mb_rows * self._kv_token_bytes
+            attn_bytes_stream += sum(_stream_bytes(l) for l in range(slots))
             logits_np = np.asarray(logits, np.float32)
             for lane in plan.decode_lanes:
                 req = self.scheduler.request_at(lane)
                 req.decode_pos += 1
                 tok = self._sample(logits_np[lane, 0], req)
                 req.produced.append(tok)
-                if self.window_horizon:
-                    self.kv.release_expired(lane, req.decode_pos,
-                                            self.window_horizon)
+                if self._reclaims:
+                    self.kv.release_expired(lane, req.decode_pos)
                 self._maybe_finish(lane, tok)
             decode_tokens = len(plan.decode_lanes)
 
@@ -292,6 +425,11 @@ class ServingEngine:
             "free_blocks": self.kv.num_free,
             "queue_depth": self.scheduler.queue_depth,
             "preempted": len(plan.preempted),
+            # shared-prefix reuse: context tokens admissions served from the
+            # radix index this step (their prefill chunks never run), and
+            # how many physical blocks currently have multiple holders
+            "prefix_hit_tokens": plan.prefix_hit_tokens,
+            "blocks_shared": self.kv.blocks_shared,
             # projection: weights stream once per step; every processed token
             # writes its KV; reads cover each participant's live prefix
             "hbm_bytes": (self._param_bytes
@@ -302,25 +440,30 @@ class ServingEngine:
             # participant's full MB*bs logical sequence, per layer);
             # stream = bytes the Pallas kernel DMAs through the VMEM ring —
             # it skips blocks outside each lane's visible range, so this is
-            # each participant's LIVE blocks (approximate across layers:
-            # window layers skip expired blocks even when a full-attention
-            # layer in the same model still reads them)
-            "attn_bytes_gather": attn_rows_gather * self._kv_token_bytes,
-            "attn_bytes_stream": attn_rows_stream * self._kv_token_bytes,
+            # each participant's LIVE blocks per layer group
+            "attn_bytes_gather": attn_bytes_gather,
+            "attn_bytes_stream": attn_bytes_stream,
         })
         return True
 
     def defragment(self) -> None:
-        """Compact the physical pool (gathers then touch one dense prefix);
-        pools are permuted in lockstep with the tables."""
-        perm = self.kv.defragment()
-        jperm = jnp.asarray(perm)
+        """Compact each group's physical pool (gathers then touch one dense
+        prefix); pools are permuted in lockstep with the tables, and every
+        holder of a moved shared block — other lanes' tables AND the prefix
+        index — is rewritten through the same old->new map."""
+        self._apply_pending_copies()      # copies reference pre-perm ids
+        perms = self.kv.defragment()
+        jperms = tuple(jnp.asarray(p) for p in perms)
 
         def apply(path, pool):
+            jperm = jperms[tf.cache_path_group(self.cfg, path)]
             return (pool[:, jperm] if tf.is_stacked_cache_path(path)
                     else pool[jperm])
 
         self.caches = jax.tree_util.tree_map_with_path(apply, self.caches)
+        if self.prefix is not None:
+            self.prefix.remap(tuple(PagedKVCache.old_to_new(p)
+                                    for p in perms))
 
     def run(self, max_steps: int = 10_000):
         steps = 0

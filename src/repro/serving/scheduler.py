@@ -15,14 +15,27 @@ steps are the compute slots.  This scheduler applies the same move:
   * one chunk size means ONE compiled prefill shape and one decode shape —
     the engine never re-jits per prompt length.
 
+Shared-prefix reuse (serving/prefix.py): when a `PrefixCache` is attached,
+admission probes it with the request's context and maps the matched blocks
+straight into the lane's table — prefill then STARTS at the matched token
+count (`Request.cached_tokens`), skipping those chunks entirely, so the
+per-step budget they would have burned goes to decode and other prefills
+instead.  A partially-filled matched tail block is mapped copy-on-write
+(`fork_block` per layer group; the engine copies the pool rows before any
+write).  Preemption resume re-probes: a victim's shares are dropped with its
+blocks at preemption and the fresh admission path runs the probe again, so
+a stale hit can never outlive the blocks it pointed at.
+
 Policies:
   * FCFS admission: the waiting queue is served strictly in submission
     order; a free lane always takes the queue head.
-  * Preemption by block pressure: when the shared block pool runs dry, the
-    YOUNGEST running request is preempted (recompute-style: its blocks are
-    freed and it re-queues at the front with its generated tokens carried,
-    to be re-prefilled on resume).  Victims are strictly younger than the
-    requester, so the oldest request always makes progress — no starvation.
+  * Block pressure: when the shared pool runs dry the prefix index first
+    LRU-evicts zero-lane-ref cached prefixes; only when nothing cold is
+    left does the YOUNGEST running request get preempted (recompute-style:
+    its blocks are freed and it re-queues at the front with its generated
+    tokens carried, to be re-prefilled — possibly from cache — on resume).
+    Victims are strictly younger than the requester, so the oldest request
+    always makes progress — no starvation.
 
 Pure host-side logic (no jax): unit-testable without a model.
 """
@@ -35,7 +48,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.schedule import round_up
-from repro.serving.cache import PagedKVCache
+from repro.serving.cache import GroupedPagedCache, PagedKVCache  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -50,6 +63,9 @@ class Request:
     prefill_pos: int = 0                 # next un-prefilled position
     decode_pos: int = -1                 # next KV write position in decode
     preemptions: int = 0
+    cached_tokens: int = 0               # context tokens served by the prefix
+                                         # cache at the LAST admission (their
+                                         # prefill chunks are skipped)
 
     @property
     def plen(self) -> int:
@@ -76,6 +92,8 @@ class StepPlan:
     prefill: Optional[PrefillWork]
     decode_lanes: "tuple[int, ...]"
     preempted: "tuple[int, ...]"      # rids preempted while planning
+    prefix_hit_tokens: int = 0        # context tokens served from the prefix
+                                      # cache by admissions in this plan
 
     @property
     def scheduled_tokens(self) -> int:
@@ -89,14 +107,18 @@ class ChunkedPrefillScheduler:
     PREFILL = "prefill"
     DECODE = "decode"
 
-    def __init__(self, cache: PagedKVCache, *, slots: int, chunk: int):
+    def __init__(self, cache, *, slots: int, chunk: int, prefix=None):
         bs = cache.cfg.block_size
         if chunk < 1 or chunk % bs:
             raise ValueError(f"chunk {chunk} must be a positive multiple of "
                              f"the block size {bs}")
+        if prefix is not None and not isinstance(cache, GroupedPagedCache):
+            raise ValueError("prefix caching needs a GroupedPagedCache "
+                             "(per-group tables + refcounted shares)")
         self.cache = cache
         self.slots = slots
         self.chunk = chunk
+        self.prefix = prefix
         self.waiting: "deque[Request]" = deque()
         self.running: "dict[int, Request]" = {}     # lane -> Request
         self.phase: "dict[int, str]" = {}           # lane -> PREFILL|DECODE
@@ -143,7 +165,40 @@ class ChunkedPrefillScheduler:
     def _free_lanes(self) -> "list[int]":
         return [l for l in range(self.slots) if l not in self.running]
 
-    def _admit(self) -> None:
+    def _probe_prefix(self, req: Request) -> int:
+        """Map the longest reusable cached prefix of `req.context` into the
+        lane's tables.  Fully-matched blocks are shared read-only; a
+        partially-matched tail block is shared then immediately forked
+        (copy-on-write) per layer group, since the lane will append into it.
+        Returns the cached token count (prefill starts there)."""
+        hit = self.prefix.match(req.context, max_len=self.max_len,
+                                chunk=self.chunk)
+        C = hit.tokens
+        if not C:
+            return 0
+        bs = self.cache.cfg.block_size
+        nfull = C // bs
+        self.cache.share_blocks(
+            req.lane, tuple(list(b) for b in hit.blocks))
+        if hit.tail is not None:
+            self.cache.share_blocks(
+                req.lane, tuple([t] for t in hit.tail))
+            if not self.cache.fork_tail(req.lane, nfull):
+                # pool too dry to copy the tail block (admission never
+                # preempts).  `match` validated window-null feasibility at
+                # the ORIGINAL C only, so on a model with windowed groups
+                # the block-aligned truncation could pull expired null
+                # coverage into the live window — drop the whole share
+                # there; global-only models keep the always-feasible floor.
+                self.cache.drop_last_shared(req.lane)
+                if any(h is not None for h in self.cache.horizons):
+                    self.cache.free_lane(req.lane)
+                    return 0
+                C = nfull * bs
+        return C
+
+    def _admit(self) -> int:
+        hit_tokens = 0
         for lane in self._free_lanes():
             if not self.waiting:
                 break
@@ -151,15 +206,21 @@ class ChunkedPrefillScheduler:
             req.lane = lane
             req.context = np.concatenate(
                 [req.prompt, np.asarray(req.produced, np.int32)])
-            req.prefill_pos = 0
             req.decode_pos = -1
+            req.cached_tokens = (self._probe_prefix(req)
+                                 if self.prefix is not None else 0)
+            req.prefill_pos = req.cached_tokens
+            hit_tokens += req.cached_tokens
             self.running[lane] = req
             self.phase[lane] = self.PREFILL
+        return hit_tokens
 
     def _preempt_youngest(self, than_rid: int) -> "Request | None":
         """Free the youngest running request strictly younger than
         `than_rid`; re-queue it at the FRONT (it stays ahead of never-
-        admitted requests, preserving FCFS)."""
+        admitted requests, preserving FCFS).  The victim's prefix-cache
+        shares are dropped with its blocks; the fresh admission on resume
+        RE-PROBES the index, so no stale hit survives preemption."""
         victims = [r for r in self.running.values() if r.rid > than_rid]
         if not victims:
             return None
@@ -172,6 +233,7 @@ class ChunkedPrefillScheduler:
         victim.context = None
         victim.prefill_pos = 0
         victim.decode_pos = -1
+        victim.cached_tokens = 0
         victim.preemptions += 1
         self.waiting.appendleft(victim)
         return victim
@@ -179,21 +241,21 @@ class ChunkedPrefillScheduler:
     def _ensure_blocks(self, req: Request, upto_pos: int,
                        preempted: "list[int]") -> bool:
         while not self.cache.ensure(req.lane, upto_pos):
+            if self.prefix is not None and self.prefix.evict(
+                    self.cache.blocks_needed(req.lane, upto_pos)):
+                continue                   # cold cached prefixes go first
             victim = self._preempt_youngest(req.rid)
             if victim is None:
                 return False
             preempted.append(victim.rid)
         return True
 
-    def _padded_len(self, req: Request) -> int:
-        return round_up(len(req.context), self.chunk)
-
     def schedule(self) -> "StepPlan | None":
         """Plan one engine step: at most one prefill chunk + every decode
         lane whose next block is (made) available.  Requests are visited
         oldest-first, so preemption victims (always younger) are never
         already in the plan.  Returns None when nothing is runnable."""
-        self._admit()
+        hit_tokens = self._admit()
         if not self.running:
             return None
         preempted: "list[int]" = []
@@ -208,14 +270,17 @@ class ChunkedPrefillScheduler:
                 continue
             if prefill is not None:
                 continue                       # one chunk per step (one shape)
-            start = req.prefill_pos
+            ctx = req.context
+            start = req.prefill_pos            # cached_tokens on chunk one —
+            #                                    may be ANY token index; the
+            #                                    paged write path scatters at
+            #                                    token granularity
             if not self._ensure_blocks(req, start + self.chunk - 1, preempted):
                 continue
-            ctx = req.context
             toks = np.zeros(self.chunk, np.int32)
             real = ctx[start : min(len(ctx), start + self.chunk)]
             toks[: len(real)] = real
-            final = start + self.chunk >= self._padded_len(req)
+            final = start + self.chunk >= len(ctx)
             prefill = PrefillWork(
                 lane=req.lane, rid=req.rid, tokens=toks, start_pos=start,
                 last_idx=(len(ctx) - 1 - start) if final else 0,
@@ -227,4 +292,5 @@ class ChunkedPrefillScheduler:
         # victims are strictly younger than the requester, so a lane already
         # planned can never have been preempted while planning
         return StepPlan(prefill=prefill, decode_lanes=tuple(decode),
-                        preempted=tuple(preempted))
+                        preempted=tuple(preempted),
+                        prefix_hit_tokens=hit_tokens)

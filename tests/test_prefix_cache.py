@@ -1,0 +1,538 @@
+"""Shared-prefix KV reuse: radix-tree index units, copy-on-write fork
+semantics, refcount invariants under preempt/resume, per-layer-group
+reclamation, and token-for-token parity of shared-prefix vs cold-prefill
+serving on the three attention families."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.schedule import plan_serve_chunk
+from repro.serving.cache import GroupedPagedCache, PagedKVCache
+from repro.serving.prefix import PrefixCache
+
+pytestmark = pytest.mark.tier1
+
+BS = 4
+
+
+def make_cache(groups=1, num_blocks=33, slots=2, mb=16, horizons=None):
+    horizons = horizons if horizons is not None else (None,) * groups
+    return GroupedPagedCache(slots=slots, num_blocks=num_blocks,
+                             block_size=BS, max_blocks_per_seq=mb,
+                             horizons=horizons)
+
+
+def lane_insert(kv, pc, lane, tokens):
+    """Map fresh blocks for `tokens` on `lane` and index them — the engine's
+    insert-at-prefill-complete path in miniature."""
+    tokens = np.asarray(tokens, np.int32)
+    assert kv.ensure(lane, len(tokens) - 1)
+    n = -(-len(tokens) // BS)
+    return pc.insert(tokens, kv.table_snapshot(lane, n))
+
+
+class TestRadixIndex:
+    def test_roundtrip_and_cap(self):
+        kv = make_cache()
+        pc = PrefixCache(kv)
+        toks = np.arange(100, 100 + 3 * BS, dtype=np.int32)   # 3 full blocks
+        lane_insert(kv, pc, 0, toks)
+        # identical query: cap at len-1 keeps the last token computed
+        hit = pc.match(toks)
+        assert hit.tokens == len(toks) - 1
+        assert len(hit.blocks[0]) == 2 and hit.tail is not None
+        # longer query: all 3 blocks reusable
+        hit = pc.match(np.concatenate([toks, [1, 2]]).astype(np.int32))
+        assert hit.tokens == 3 * BS and hit.tail is None
+        assert list(hit.blocks[0]) == kv.groups[0].table_snapshot(0, 3)
+        # disjoint query: miss
+        assert pc.match(np.arange(50, 60, dtype=np.int32)).tokens == 0
+        assert pc.hit_rate() == pytest.approx(2 / 3)
+
+    def test_block_boundary_split(self):
+        kv = make_cache()
+        pc = PrefixCache(kv)
+        a = list(range(100, 100 + 2 * BS))
+        lane_insert(kv, pc, 0, a + [1, 2, 3, 4])   # shares 2 blocks, then b1
+        lane_insert(kv, pc, 1, a + [5, 6, 7, 8])   # diverges at the boundary
+        q = np.asarray(a + [5, 6, 7, 8, 9], np.int32)
+        hit = pc.match(q)
+        assert hit.tokens == 3 * BS
+        # the common 2 blocks come from lane 0's insert (canonical copy)
+        assert list(hit.blocks[0][:2]) == kv.groups[0].table_snapshot(0, 2)
+        assert hit.blocks[0][2] == kv.groups[0].table_snapshot(1, 3)[2]
+
+    def test_mid_block_divergence_forks_partial(self):
+        kv = make_cache()
+        pc = PrefixCache(kv)
+        lane_insert(kv, pc, 0, [10, 11, 12, 13, 20, 21, 22, 23])
+        # diverges INSIDE block 1: only 2 of its tokens match -> the hit
+        # forks lane 0's block (copy-on-write source), sharing 6 tokens
+        hit = pc.match(np.asarray([10, 11, 12, 13, 20, 21, 9, 9, 9], np.int32))
+        assert hit.tokens == BS + 2
+        assert hit.tail == (kv.groups[0].table_snapshot(0, 2)[1],)
+
+    def test_tail_survives_extension_upgrade(self):
+        kv = make_cache()
+        pc = PrefixCache(kv)
+        # first insert ends mid-block (tail); re-insert extends it full
+        lane_insert(kv, pc, 0, [10, 11, 12, 13, 20, 21])
+        held_before = pc.blocks_held
+        lane_insert(kv, pc, 1, [10, 11, 12, 13, 20, 21, 22, 23, 30])
+        # a divergent continuation still partial-matches the first 6 tokens
+        hit = pc.match(np.asarray([10, 11, 12, 13, 20, 21, 7, 7], np.int32))
+        assert hit.tokens == BS + 2 and hit.tail is not None
+        assert pc.blocks_held >= held_before
+        kv.check_invariants(pc.held_blocks())
+
+    def test_lru_eviction_zero_lane_ref_only(self):
+        kv = make_cache(num_blocks=9, mb=8)       # 8 allocatable blocks
+        pc = PrefixCache(kv)
+        lane_insert(kv, pc, 0, list(range(10, 10 + 2 * BS)))   # older
+        lane_insert(kv, pc, 1, list(range(50, 50 + 2 * BS)))   # newer
+        kv.free_lane(0)                  # lane refs drop; index keeps both
+        assert kv.blocks_in_use == 4
+        # lane 1 still maps its blocks -> NOT evictable; lane 0's are
+        freed = pc.evict(8)
+        assert freed == 2                # only the zero-lane-ref leaf went
+        assert pc.match(np.asarray(list(range(10, 19)), np.int32)).tokens == 0
+        assert pc.match(np.asarray(list(range(50, 59)), np.int32)).tokens == 8
+        kv.free_lane(1)
+        assert pc.evict(8) == 2
+        assert kv.blocks_in_use == 0
+        kv.check_invariants(pc.held_blocks())
+
+    def test_lru_order(self):
+        kv = make_cache()
+        pc = PrefixCache(kv)
+        lane_insert(kv, pc, 0, list(range(10, 10 + 2 * BS)))
+        lane_insert(kv, pc, 1, list(range(50, 50 + 2 * BS)))
+        kv.free_lane(0)
+        kv.free_lane(1)
+        pc.match(np.asarray(list(range(10, 19)), np.int32))   # touch older
+        pc.evict(1)                      # LRU: the untouched (50..) leaf goes
+        assert pc.match(np.asarray(list(range(10, 19)), np.int32)).tokens == 8
+        assert pc.match(np.asarray(list(range(50, 59)), np.int32)).tokens == 0
+
+    def test_max_blocks_cap(self):
+        kv = make_cache()
+        pc = PrefixCache(kv, max_blocks=2)
+        lane_insert(kv, pc, 0, list(range(10, 10 + 4 * BS)))
+        assert pc.blocks_held == 4       # lane still maps them: no eviction
+        kv.free_lane(0)
+        pc.enforce_cap()                 # the engine's finish-path hook
+        assert pc.blocks_held <= 2
+        kv.check_invariants(pc.held_blocks())
+
+    def test_window_null_feasibility(self):
+        kv = make_cache(horizons=(2 * BS,))      # window = 2 blocks
+        pc = PrefixCache(kv)
+        toks = np.arange(100, 100 + 4 * BS, dtype=np.int32)
+        assert kv.ensure(0, len(toks) - 1)
+        # blocks 0..1 expired behind the window before insert
+        kv.groups[0].release_expired(0, len(toks) - 1, 2 * BS)
+        pc.insert(toks, kv.table_snapshot(0, 4))
+        # full-length match: nulls sit wholly behind the window -> usable
+        q = np.concatenate([toks, [1, 2]]).astype(np.int32)
+        assert pc.match(q).tokens == 4 * BS
+        # a SHORT query would need the nulled early blocks inside its
+        # window -> no usable prefix
+        assert pc.match(toks[: 2 * BS + 2]).tokens == 0
+
+    def test_global_group_rejects_nulls(self):
+        kv = make_cache(groups=2, horizons=(None, 2 * BS))
+        pc = PrefixCache(kv)
+        toks = np.arange(100, 100 + 4 * BS, dtype=np.int32)
+        assert kv.ensure(0, len(toks) - 1)
+        kv.groups[1].release_expired(0, len(toks) - 1, 2 * BS)  # window group
+        pc.insert(toks, kv.table_snapshot(0, 4))
+        q = np.concatenate([toks, [1, 2]]).astype(np.int32)
+        assert pc.match(q).tokens == 4 * BS   # global group fully backed
+        # now a hole in a GLOBAL group: match must stop before it (every
+        # later query still reads the whole history there)
+        kv2 = make_cache(groups=2, horizons=(None, None))
+        pc2 = PrefixCache(kv2)
+        assert kv2.ensure(0, len(toks) - 1)
+        snap = kv2.table_snapshot(0, 4)
+        crippled = ([snap[0][0], 0, snap[0][2], snap[0][3]], list(snap[1]))
+        # drop the lane ref for the entry the snapshot punched out
+        kv2.groups[0]._release([snap[0][1]])
+        kv2.groups[0].tables[0, 1] = 0
+        pc2.insert(toks, crippled)
+        assert pc2.match(q).tokens == BS      # stops at the global hole
+
+    def test_remap_after_defragment(self):
+        kv = make_cache(slots=3)
+        pc = PrefixCache(kv)
+        lane_insert(kv, pc, 0, list(range(10, 10 + 2 * BS)))
+        lane_insert(kv, pc, 1, list(range(50, 50 + 3 * BS)))
+        kv.free_lane(0)                       # hole in the pool
+        perms = kv.defragment()
+        pc.remap(tuple(PagedKVCache.old_to_new(p) for p in perms))
+        hit = pc.match(np.asarray(list(range(50, 66)), np.int32))
+        assert hit.tokens == 3 * BS
+        assert list(hit.blocks[0]) == kv.groups[0].table_snapshot(1, 3)
+        kv.check_invariants(pc.held_blocks())
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=20),
+                    min_size=1, max_size=6),
+           st.lists(st.integers(0, 3), min_size=1, max_size=20))
+    def test_match_blocks_spell_the_query(self, seqs, query):
+        """Whatever the insert history, a hit's blocks must cover exactly
+        the query's leading tokens, C <= len-1, and refcount invariants
+        hold."""
+        kv = make_cache(num_blocks=257, slots=1, mb=8)
+        pc = PrefixCache(kv)
+        spelled = {}                       # physical block -> its tokens
+        for seq in seqs:
+            toks = np.asarray(seq[: 8 * BS], np.int32)
+            lane_insert(kv, pc, 0, toks)
+            for j, b in enumerate(kv.groups[0].table_snapshot(
+                    0, -(-len(toks) // BS))):
+                # overwrite: a freed-and-reused id spells its NEW tokens;
+                # index-adopted blocks are never reused (no eviction here)
+                spelled[b] = toks[j * BS : (j + 1) * BS]
+            kv.free_lane(0)
+        q = np.asarray(query, np.int32)
+        hit = pc.match(q)
+        assert 0 <= hit.tokens <= max(0, len(q) - 1)
+        nfull = hit.tokens // BS
+        assert len(hit.blocks[0]) == nfull
+        for j, b in enumerate(hit.blocks[0]):
+            np.testing.assert_array_equal(spelled[b],
+                                          q[j * BS : (j + 1) * BS])
+        if hit.tail is not None:
+            k = hit.tokens - nfull * BS
+            np.testing.assert_array_equal(
+                spelled[hit.tail[0]][:k], q[nfull * BS : hit.tokens])
+        kv.check_invariants(pc.held_blocks())
+
+
+class TestForkOomFallback:
+    def _probe(self, horizons):
+        from repro.serving.scheduler import ChunkedPrefillScheduler, Request
+        # 4 allocatable blocks: the insert pins 3, the drain takes the last
+        kv = make_cache(groups=len(horizons), num_blocks=5, mb=8,
+                        horizons=horizons)
+        pc = PrefixCache(kv)
+        toks = list(range(100, 100 + 2 * BS + 2))   # 2 full blocks + 2 tail
+        lane_insert(kv, pc, 0, toks)
+        kv.free_lane(0)
+        sched = ChunkedPrefillScheduler(kv, slots=2, chunk=BS, prefix=pc)
+        req = Request(rid=0, prompt=np.asarray(toks + [1, 2], np.int32),
+                      max_new=2)
+        req.lane = 0
+        req.context = req.prompt
+        # drain the pool so the COW fork cannot allocate its copy
+        assert kv.groups[0].ensure(1, BS - 1)
+        assert kv.num_free == 0
+        C = sched._probe_prefix(req)
+        return C, kv, pc
+
+    def test_global_model_keeps_block_aligned_floor(self):
+        C, kv, pc = self._probe((None,))
+        assert C == 2 * BS               # tail dropped, full blocks kept
+        kv.check_invariants(pc.held_blocks())
+
+    def test_window_model_drops_the_whole_share(self):
+        """Regression: `match` validated window-null feasibility at the
+        ORIGINAL C only — a fork-OOM truncation on a windowed model must
+        not keep a share whose feasibility was never checked."""
+        C, kv, pc = self._probe((BS * 2,))
+        assert C == 0
+        assert kv.groups[0].blocks_for(0) == []   # nothing left mapped
+        kv.check_invariants(pc.held_blocks())
+
+
+class TestCopyOnWrite:
+    def test_fork_block_semantics(self):
+        kv = make_cache()
+        g = kv.groups[0]
+        assert g.ensure(0, 2 * BS - 1)             # lane 0 owns 2 blocks
+        src = g.table_snapshot(0, 2)
+        kv.share_blocks(1, (list(src),))           # lane 1 shares them
+        assert g.ref_count[src[0]] == 2
+        # shared entry: fork remaps lane 1's entry to a fresh block
+        new = g.fork_block(1, 1)
+        assert new not in (None, src[1])
+        assert g.tables[1, 1] == new
+        assert g.ref_count[src[1]] == 1 and g.ref_count[new] == 1
+        # now exclusive: fork returns the same id (no copy)
+        assert g.fork_block(1, 1) == new
+        kv.check_invariants()
+
+    def test_fork_tail_queues_copies_and_oom_rolls_back(self):
+        kv = make_cache(num_blocks=4, mb=8)        # 3 allocatable
+        g = kv.groups[0]
+        assert g.ensure(0, 2 * BS - 1)             # blocks 1,2
+        kv.share_blocks(1, ([int(g.tables[0, 0])],))
+        assert kv.fork_tail(1, 0)                  # copies 1 -> 3
+        assert kv.pending_copies == [(0, int(g.tables[0, 0]),
+                                      int(g.tables[1, 0]))]
+        # pool now dry: a second shared fork must fail and roll back clean
+        kv.share_blocks(0, ([int(g.tables[1, 0])],))   # re-share the fork
+        assert not kv.fork_tail(0, 2)
+        kv.drop_last_shared(0)
+        kv.check_invariants()
+
+    def test_shared_blocks_are_write_protected(self):
+        kv = make_cache()
+        g = kv.groups[0]
+        assert g.ensure(0, BS - 1)
+        kv.share_blocks(1, (g.table_snapshot(0, 1),))
+        with pytest.raises(AssertionError):
+            kv.assert_writable(1, 0, 1)
+        with pytest.raises(AssertionError):
+            kv.assert_writable(0, 0, 1)            # owner lost exclusivity too
+        assert kv.fork_tail(1, 0)
+        kv.assert_writable(1, 0, 1)                # fork restored it
+
+
+class TestDefragmentShared:
+    def test_defragment_remaps_every_table_referencing_a_shared_block(self):
+        """Regression: two lanes share blocks; defragment moves one; BOTH
+        tables (and the index) must follow the move."""
+        kv = make_cache(slots=3, num_blocks=17, mb=8)
+        pc = PrefixCache(kv)
+        lane_insert(kv, pc, 2, list(range(80, 80 + 2 * BS)))  # filler
+        lane_insert(kv, pc, 0, list(range(10, 10 + 2 * BS)))
+        hit = pc.match(np.asarray(list(range(10, 10 + 2 * BS + 3)), np.int32))
+        kv.share_blocks(1, tuple(list(b) for b in hit.blocks))
+        kv.free_lane(2)                            # hole before shared blocks
+        pool = np.arange(17)
+        before = {l: [pool[b] for b in kv.groups[0].blocks_for(l)]
+                  for l in (0, 1)}
+        perms = kv.defragment()
+        new_pool = pool[perms[0]]
+        after = {l: [new_pool[b] for b in kv.groups[0].blocks_for(l)]
+                 for l in (0, 1)}
+        assert before == after
+        assert (kv.groups[0].tables[0, :2] == kv.groups[0].tables[1, :2]).all()
+        pc.remap(tuple(PagedKVCache.old_to_new(p) for p in perms))
+        kv.check_invariants(pc.held_blocks())
+
+
+class TestPlanServeChunk:
+    def test_cached_tokens_extend_the_chunk(self):
+        base = plan_serve_chunk(token_budget=36, decode_lanes=4, block_size=16)
+        warm = plan_serve_chunk(token_budget=36, decode_lanes=4, block_size=16,
+                                cached_tokens=16)
+        assert base == 32 and warm == 48
+        with pytest.raises(ValueError):
+            plan_serve_chunk(token_budget=36, decode_lanes=4, block_size=16,
+                             cached_tokens=-1)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: parity, concurrency, preemption, per-group reclamation
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+
+from repro.models import registry  # noqa: E402
+from repro.models import transformer as tf  # noqa: E402
+from repro.serving import ServeConfig, ServingEngine  # noqa: E402
+
+PARITY_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "deepseek-v2-lite-16b")
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for arch in PARITY_ARCHS:
+        cfg = registry.get_config(arch, smoke=True)
+        out[arch] = (cfg, tf.init_params(cfg, jax.random.PRNGKey(0)))
+    return out
+
+
+def _mk(cfg, params, prefix, **kw):
+    base = dict(slots=2, max_len=64, block_size=8, prefill_chunk=8,
+                prefix_cache=prefix)
+    base.update(kw)
+    return ServingEngine(cfg, params, ServeConfig(**base))
+
+
+SHARED = list(range(100, 121))      # 21 tokens: 2 full blocks + 5-token tail
+
+
+class TestSharedPrefixParity:
+    @pytest.mark.parametrize("arch", PARITY_ARCHS)
+    def test_token_for_token_vs_cold(self, setups, arch):
+        """Greedy streams with the prefix cache ON (warm radix tree, COW
+        tail forks, shared blocks) match prefix_cache=off exactly — on GQA
+        (qwen), sliding-window local:global (gemma3), and MLA (deepseek)."""
+        cfg, params = setups[arch]
+        rounds = [SHARED + [7, 8, 9], SHARED + [11, 12], SHARED + [13]]
+
+        def run(prefix):
+            eng = _mk(cfg, params, prefix)
+            outs = []
+            for p in rounds:                 # sequential: each round can hit
+                rid = eng.submit(p, max_new_tokens=4)
+                eng.run()
+                outs.append(eng._results[rid])
+            return outs, eng
+
+        cold, _ = run(False)
+        warm, eng = run(True)
+        assert warm == cold
+        assert eng.prefix.hit_tokens > 0
+        # gemma3's window group suppresses early hits (expired coverage
+        # must be re-published by a later insert's null-upgrade first)
+        assert eng.prefix.hits >= (1 if arch == "gemma3-12b" else 2)
+        eng.kv.check_invariants(eng.prefix.held_blocks())
+
+    def test_second_lane_skips_matched_prefill_entirely(self, setups):
+        """Acceptance: two lanes share a >= 2-block prefix; the second
+        lane's prefill runs zero chunks (hence zero KV writes) for the
+        fully-matched blocks, and its stream is unchanged."""
+        cfg, params = setups["qwen1.5-0.5b"]
+        p1, p2 = SHARED + [7, 8, 9], SHARED + [11, 12, 13, 14]
+
+        cold = _mk(cfg, params, False)
+        c1, c2 = cold.submit(p1, 5), cold.submit(p2, 5)
+        cold.run()
+
+        eng = _mk(cfg, params, True)
+        r1 = eng.submit(p1, max_new_tokens=5)
+        while eng.scheduler.phase.get(0) != "decode":   # r1 prefill completes
+            eng.step()
+        steps_before = len(eng.metrics)
+        r2 = eng.submit(p2, max_new_tokens=5)
+        eng.run()
+        assert [eng._results[r1], eng._results[r2]] == \
+            [cold._results[c1], cold._results[c2]]
+        # r2's context is 25 tokens; 21 came from the cache (2 full blocks +
+        # a 5-token COW fork), so its prefill is ONE chunk, not four
+        hit = sum(m["prefix_hit_tokens"] for m in eng.metrics[steps_before:])
+        assert hit == 21
+        r2_chunks = sum(1 for m in eng.metrics[steps_before:]
+                        if m["prefill_tokens"])
+        assert r2_chunks == 1
+        assert max(m["blocks_shared"] for m in eng.metrics) >= 2
+        eng.kv.check_invariants(eng.prefix.held_blocks())
+
+    def test_preempt_resume_reprobes_and_matches_cold(self, setups):
+        """Block pressure with the prefix cache on: evictions run before
+        preemption, a preempted victim re-probes on resume (often hitting
+        its own previously-published prefix), and outputs still match the
+        unconstrained engine token-for-token."""
+        cfg, params = setups["qwen1.5-0.5b"]
+        prompts = [SHARED + [7], SHARED + [9, 9]]
+        max_new = (12, 4)
+
+        def run(**kw):
+            eng = _mk(cfg, params, True, **kw)
+            rids = [eng.submit(p, max_new_tokens=n)
+                    for p, n in zip(prompts, max_new)]
+            eng.run()
+            return [eng._results[r] for r in rids], eng
+
+        big, _ = run()
+        tight, eng = run(num_blocks=8)       # 7 blocks shared by both lanes
+        assert tight == big
+        assert any(m["preempted"] for m in eng.metrics)
+        eng.kv.check_invariants(eng.prefix.held_blocks())
+
+    def test_defragment_with_shared_blocks_is_transparent(self, setups):
+        """Regression (satellite): share a prefix across two live lanes,
+        defragment mid-stream, keep decoding both — streams match the
+        defrag-free run."""
+        cfg, params = setups["qwen1.5-0.5b"]
+        p1, p2 = SHARED + [7, 8, 9], SHARED + [11, 12, 13, 14]
+
+        def run(defrag):
+            eng = _mk(cfg, params, True)
+            r1 = eng.submit(p1, max_new_tokens=8)
+            while eng.scheduler.phase.get(0) != "decode":
+                eng.step()
+            r2 = eng.submit(p2, max_new_tokens=8)
+            steps = 0
+            while eng.pending and steps < 500:
+                eng.step()
+                steps += 1
+                if defrag and steps % 3 == 0:
+                    eng.defragment()
+            if defrag:
+                eng.kv.check_invariants(eng.prefix.held_blocks())
+            return [eng._results[r1], eng._results[r2]]
+
+        assert run(defrag=True) == run(defrag=False)
+
+    def test_temperature_streams_reproducible_with_sharing(self, setups):
+        """Sampling keys fold (seed, rid, token_idx) — prefix hits change
+        which chunks run, not which tokens come out."""
+        cfg, params = setups["qwen1.5-0.5b"]
+
+        def run(prefix):
+            eng = _mk(cfg, params, prefix, temperature=0.8, seed=7)
+            outs = []
+            for p in (SHARED + [7], SHARED + [7]):
+                rid = eng.submit(p, max_new_tokens=5)
+                eng.run()
+                outs.append(eng._results[rid])
+            return outs
+
+        assert run(True) == run(False)
+
+
+class TestPerLayerGroupTables:
+    def test_gemma3_groups_split_window_and_global(self, setups):
+        cfg, _ = setups["gemma3-12b"]
+        assert tf.layer_group_keys(cfg) == ("window", "global")
+        assert tf.group_horizons(cfg) == (cfg.window_size, None)
+        qcfg, _ = setups["qwen1.5-0.5b"]
+        assert tf.layer_group_keys(qcfg) == ("global",)
+
+    def test_windowed_group_reclaims_while_global_pins(self, setups):
+        """The lifted gemma3 limitation: window-layer blocks plateau during
+        a long decode while global-layer blocks keep growing — and outputs
+        still match the dense-engine oracle."""
+        cfg, params = setups["gemma3-12b"]        # window 16, mixed stack
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=96, block_size=8, prefill_chunk=8))
+        assert eng.window_horizon is None          # whole-model condition
+        assert eng.group_horizons == (16, None)
+        rid = eng.submit(list(range(1, 9)), max_new_tokens=60)
+        win = eng.kv.groups[tf.layer_group_keys(cfg).index("window")]
+        glob = eng.kv.groups[tf.layer_group_keys(cfg).index("global")]
+        peak_win = peak_glob = 0
+        while eng.pending:
+            eng.step()
+            peak_win = max(peak_win, win.blocks_in_use)
+            peak_glob = max(peak_glob, glob.blocks_in_use)
+        out = eng._results[rid]
+        assert len(out) == 60
+        # 68-token context: global pins ceil(68/8) blocks; window plateaus
+        # at <= 2 visible + 1 write block the whole way
+        assert peak_glob >= 8
+        assert peak_win <= 3
+
+        from repro.serving import DenseServingEngine
+        dense = DenseServingEngine(cfg, params, ServeConfig(slots=1,
+                                                            max_len=96))
+        drid = dense.submit(list(range(1, 9)), max_new_tokens=60)
+        assert dense.run()[drid] == out
+
+    def test_prefix_sharing_on_mixed_window_model(self, setups):
+        """Prefix sharing operates per group on gemma3: the window group's
+        expired entries ride along as nulls and matches stay correct."""
+        cfg, params = setups["gemma3-12b"]
+
+        def run(prefix):
+            eng = _mk(cfg, params, prefix, max_len=96)
+            outs = []
+            for p in (SHARED + [7, 8], SHARED + [9]):
+                rid = eng.submit(p, max_new_tokens=20)
+                eng.run()
+                outs.append(eng._results[rid])
+            return outs, eng
+
+        cold, _ = run(False)
+        warm, eng = run(True)
+        assert warm == cold
+        assert eng.prefix.hits >= 1
+        eng.kv.check_invariants(eng.prefix.held_blocks())
