@@ -687,6 +687,90 @@ def bench_serving_prefix_reuse():
         })
 
 
+def bench_serving_speculative():
+    """Speculative decoding (self-drafted n-gram drafts + one batched verify
+    pass of draft_len+1 tokens per lane) on a decode-heavy repetitive trace.
+
+    Decode streams the full weight working set per step for ONE new token
+    per lane — the worst bytes-per-useful-token regime in the GPP ledger.
+    Accepted drafts amortize that same stream over up to draft_len+1 emitted
+    tokens, so the headline is HBM bytes per EMITTED token, speculation on
+    vs off, at TOKEN-IDENTICAL outputs (asserted).  In the bandwidth-bound
+    deployment regime the paper targets, tokens/sec is the inverse of that
+    ledger, so the asserted >=1.5x throughput speedup is the PROJECTED
+    (bandwidth-bound) one from the deterministic byte counts; measured
+    wall-clock tokens/sec on this smoke-scale compute-bound host is
+    recorded alongside for reference (noisy, not asserted)."""
+    import jax
+    import numpy as np
+    from repro.models import registry
+    from repro.models import transformer as tf
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    SLOTS, MAX_LEN, MAX_NEW, DRAFT_LEN = 2, 128, 48, 4
+    rng = np.random.default_rng(0)
+    # repetitive prompts (chat boilerplate / structured output stand-in):
+    # prompt-lookup drafting feeds on exactly this kind of local repetition
+    prompts = [np.tile(rng.integers(0, cfg.vocab_size, size=4), 8).tolist()
+               for _ in range(4)]
+
+    def trace(spec):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=SLOTS, max_len=MAX_LEN, speculation=spec,
+            draft_len=DRAFT_LEN if spec else 0))
+        # warm-up: compile every step shape outside the timed region
+        eng.submit(np.tile([7, 9], 8).tolist(), max_new_tokens=12)
+        eng.run()
+        # min-of-3 identical waves: wall-clock on a shared host is noisy,
+        # the engine's work per wave (steps, bytes fed) is deterministic
+        best_dt, streams, ms = float("inf"), None, None
+        for _ in range(3):
+            base_steps = len(eng.metrics)
+            t0 = time.perf_counter()
+            rids = [eng.submit(p, max_new_tokens=MAX_NEW) for p in prompts]
+            eng.run()
+            dt = time.perf_counter() - t0
+            wave = [eng.result(r) for r in rids]
+            assert streams is None or wave == streams
+            if dt < best_dt:
+                best_dt, streams, ms = dt, wave, eng.metrics[base_steps:]
+        emitted = sum(len(s) for s in streams)
+        hbm_per_tok = sum(m["hbm_bytes"] for m in ms) / emitted
+        return streams, emitted / best_dt, hbm_per_tok, len(ms), eng
+
+    off_streams, tps_off, hbm_off, steps_off, _ = trace(False)
+    on_streams, tps_on, hbm_on, steps_on, eng = trace(True)
+    assert on_streams == off_streams, "speculation changed the output stream"
+    acc = eng.acceptance_rate()
+    assert acc > 0, "repetitive trace produced no accepted drafts"
+    assert hbm_on < hbm_off, \
+        "accepted drafts must cut HBM bytes per emitted token"
+    bw_speedup = hbm_off / hbm_on   # tokens/sec ratio when HBM-bound
+    assert bw_speedup >= 1.5, \
+        f"bandwidth-bound speedup {bw_speedup:.2f}x below the 1.5x target"
+    _record_serving(
+        "serving_speculative", 0.0,
+        f"bw_bound_speedup={bw_speedup:.2f}x_hbm_B/tok={hbm_on:.2e}"
+        f"_vs_{hbm_off:.2e}_acceptance={acc:.2f}"
+        f"_steps={steps_on}vs{steps_off}"
+        f"_wallclock_tok/s={tps_on:.0f}vs{tps_off:.0f}",
+        extra={
+            "bandwidth_bound_speedup": round(bw_speedup, 3),
+            "hbm_bytes_per_emitted_token_spec": round(hbm_on, 1),
+            "hbm_bytes_per_emitted_token_off": round(hbm_off, 1),
+            "tokens_per_s_spec_wallclock": round(tps_on, 1),
+            "tokens_per_s_off_wallclock": round(tps_off, 1),
+            "acceptance_rate": round(acc, 3),
+            "steps_spec": steps_on, "steps_off": steps_off,
+            "tokens_per_step_cov_spec": round(eng.flatness_cov(), 3),
+            "outputs_token_identical": True,
+            "slots": SLOTS, "max_len": MAX_LEN, "max_new": MAX_NEW,
+            "draft_len": DRAFT_LEN, "draft_source": "self",
+        })
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     try:
@@ -705,6 +789,7 @@ def main() -> None:
         bench_serving_step_metrics()
         bench_serving_paged_attn_gather_vs_kernel()
         bench_serving_prefix_reuse()
+        bench_serving_speculative()
         bench_streamer_modes()
     finally:
         # keep the partial perf record even if one benchmark dies mid-run

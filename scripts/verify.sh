@@ -69,3 +69,32 @@ eng.kv.check_invariants(eng.prefix.held_blocks())
 print(f"prefix-cache parity OK (shared == cold), hit_rate={hit_rate:.2f} "
       f"hit_tokens={hit_tokens}")
 PY
+echo "--- speculation smoke (batched verify, greedy parity vs off) ---"
+python - <<'PY'
+import jax, numpy as np
+from repro.models import registry, transformer as tf
+from repro.serving import ServeConfig, ServingEngine
+
+cfg = registry.get_config("qwen1.5-0.5b", smoke=True)
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+# repetitive multi-turn trace: prompt-lookup self-drafting feeds on it
+prompts = [np.tile([5, 6, 7, 8], 6).tolist(), [1, 2, 3],
+           np.tile([9, 3], 10).tolist()]
+
+def run(spec):
+    eng = ServingEngine(cfg, params, ServeConfig(
+        slots=2, max_len=128, speculation=spec,
+        draft_len=4 if spec else 0))
+    rids = [eng.submit(p, max_new_tokens=16) for p in prompts]
+    res = eng.run()
+    return [res[r] for r in rids], eng
+
+off, _ = run(False)
+on, eng = run(True)
+assert on == off, (on, off)
+acc = eng.acceptance_rate()
+assert acc > 0, acc
+eng.kv.check_invariants()
+print(f"speculation parity OK (spec == off), acceptance_rate={acc:.2f} "
+      f"steps={len(eng.metrics)} traces={eng.trace_counts}")
+PY

@@ -97,6 +97,28 @@ class ModelConfig:
                                      # applies either way).
                                      # ServeConfig.prefix_cache_blocks
                                      # overrides.
+    speculation: bool = False        # paged serving: speculative decoding —
+                                     # self-drafted (prompt-lookup n-gram)
+                                     # or draft-model tokens are scored in
+                                     # ONE batched verify pass of draft_len+1
+                                     # tokens per lane, amortizing the
+                                     # streamed weight working set over up
+                                     # to draft_len+1 tokens instead of 1
+                                     # (the GPP bytes-per-useful-token fix
+                                     # for decode).  Greedy/temperature
+                                     # output streams are token-for-token
+                                     # identical with speculation on or off;
+                                     # rejected drafts roll back via block-
+                                     # table truncation.
+                                     # ServeConfig.speculation overrides.
+    draft_len: int = 4               # max draft tokens per lane per verify
+                                     # step (k; the verify shape is
+                                     # (slots, k+1)).  Actual per-step
+                                     # drafts also respect the scheduler's
+                                     # flatness slack
+                                     # (core.schedule.plan_verify_budget)
+                                     # and each lane's remaining quota.
+                                     # ServeConfig.draft_len overrides.
 
     @property
     def jdtype(self):

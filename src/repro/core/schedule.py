@@ -284,6 +284,29 @@ def plan_serve_chunk(*, token_budget: int, decode_lanes: int,
     return max(block_size, (spare // block_size) * block_size)
 
 
+def plan_verify_budget(*, token_budget: int, prefill_tokens: int,
+                       decode_lanes: int) -> int:
+    """Draft tokens a speculative-verify step may add on top of the step's
+    prefill chunk and decode lanes — the GPP flatness math extended to
+    accepted-token bursts.
+
+    The flat target is `token_budget` tokens per step.  A prefill chunk
+    plus the decode lanes already claim `prefill_tokens + decode_lanes` of
+    it; the SLACK is what drafting may fill.  On prefill-carrying steps
+    the slack is ~0 (the chunk was sized to reach the budget), so drafts
+    ride the decode-only steps that would otherwise under-fill the link —
+    per-step token count (and hence weight-stream amortization) stays flat
+    instead of decode trickling one token per lane per weight pass.
+    """
+    if token_budget < 0:
+        raise ValueError("token_budget >= 0")
+    if prefill_tokens < 0:
+        raise ValueError("prefill_tokens >= 0")
+    if decode_lanes < 0:
+        raise ValueError("decode_lanes >= 0")
+    return max(0, token_budget - prefill_tokens - decode_lanes)
+
+
 def tokens_per_step_cov(counts: "list[int] | list[float]") -> float:
     """Coefficient of variation of per-step token counts — the serving
     flatness metric (0 = perfectly flat traffic, the GPP ideal; the seed

@@ -41,6 +41,28 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-blocks", type=int, default=None,
                     help="cap on blocks the prefix index may pin "
                          "(0 = unbounded; default: cfg.prefix_cache_blocks)")
+    ap.add_argument("--speculation", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="speculative decoding (paged engine): draft tokens "
+                         "are scored in one batched verify pass of "
+                         "draft_len+1 tokens per lane, amortizing the "
+                         "streamed weight working set; the output stream is "
+                         "token-for-token identical with speculation off "
+                         "(default: cfg.speculation)")
+    ap.add_argument("--draft-len", type=int, default=0,
+                    help="max draft tokens per lane per verify step "
+                         "(0 = cfg.draft_len; the verify shape is "
+                         "(slots, draft_len+1))")
+    ap.add_argument("--draft-source", choices=("self", "model"),
+                    default="self",
+                    help="draft proposals: 'self' mines prompt-lookup "
+                         "n-grams from the lane's history and the prefix "
+                         "radix tree (no extra weights streamed); 'model' "
+                         "rolls out --draft-model greedily")
+    ap.add_argument("--draft-model", default=None,
+                    help="registry arch name of a small draft model for "
+                         "--draft-source model (loads its smoke config "
+                         "when --smoke is set)")
     args = ap.parse_args(argv)
 
     import jax
@@ -62,13 +84,19 @@ def main(argv=None):
         prefill_chunk=args.prefill_chunk,
         paged_attn_kernel=args.paged_attn,
         prefix_cache=args.prefix_cache,
-        prefix_cache_blocks=args.prefix_cache_blocks)
+        prefix_cache_blocks=args.prefix_cache_blocks,
+        speculation=args.speculation, draft_len=args.draft_len,
+        draft_source=args.draft_source)
+    draft_model = None
+    if args.draft_model:
+        dcfg = registry.get_config(args.draft_model, smoke=args.smoke)
+        draft_model = (dcfg, tf.init_params(dcfg, jax.random.PRNGKey(1)))
     if args.engine == "paged":
-        engine = ServingEngine(cfg, params, serve)
+        engine = ServingEngine(cfg, params, serve, draft_model=draft_model)
     elif args.engine == "dense":
         engine = DenseServingEngine(cfg, params, serve)
     else:
-        engine = make_engine(cfg, params, serve)
+        engine = make_engine(cfg, params, serve, draft_model=draft_model)
     kind = type(engine).__name__
 
     rng = np.random.default_rng(0)
@@ -95,6 +123,14 @@ def main(argv=None):
             print(f"prefix_cache: hit_rate={engine.prefix_hit_rate():.2f} "
                   f"hit_tokens={hit_toks} "
                   f"blocks_held={engine.prefix.blocks_held}")
+        if getattr(engine, "draft_len", 0):
+            drafted = sum(m.get("drafted_tokens", 0) for m in engine.metrics)
+            accepted = sum(m.get("accepted_tokens", 0)
+                           for m in engine.metrics)
+            print(f"speculation: drafted={drafted} accepted={accepted} "
+                  f"acceptance_rate={engine.acceptance_rate():.2f} "
+                  f"draft_len={engine.draft_len} "
+                  f"source={engine.draft_source}")
     return results
 
 

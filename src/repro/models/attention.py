@@ -427,14 +427,31 @@ def _paged_write_token(pool, tables, positions, active, vals):
     return pool.at[blk, off].set(vals)
 
 
-def paged_mask(positions, T: int, *, window: "int | None" = None):
-    """(B, 1, T) decode mask over a gathered pool: key slot j holds absolute
-    position j; valid iff j <= pos[lane] (and within `window`)."""
+def _paged_write_multi(pool, tables, positions, active, nvalid, vals):
+    """Scatter S tokens per lane: vals (B, S, ...) land at absolute
+    positions `positions[b] + s` for s < nvalid[b] (speculative verify
+    bursts).  Rows past a lane's real token count — and whole inactive
+    lanes — are parked on null block 0, so ONE fixed (B, S) scatter shape
+    serves every draft-length / acceptance pattern."""
+    bs = pool.shape[1]
+    S = vals.shape[1]
+    pos = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    valid = active[:, None] & (jnp.arange(S)[None, :] < nvalid[:, None])
+    blk = jnp.take_along_axis(tables, jnp.where(valid, pos // bs, 0), axis=1)
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, pos % bs, 0)
+    return pool.at[blk, off].set(vals)
+
+
+def paged_mask(positions, T: int, *, S: int = 1, window: "int | None" = None):
+    """(B, S, T) decode/verify mask over a gathered pool: key slot j holds
+    absolute position j; query row s of lane b sits at positions[b] + s —
+    valid iff j <= that (and within `window`).  S=1 is plain decode."""
     kpos = jnp.arange(T)[None, None, :]
-    pos = positions[:, None, None]
-    m = kpos <= pos
+    qpos = positions[:, None, None] + jnp.arange(S)[None, :, None]
+    m = kpos <= qpos
     if window is not None:
-        m &= kpos > pos - window
+        m &= kpos > qpos - window
     return m
 
 
@@ -475,6 +492,26 @@ def gqa_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
             {"k": kc, "v": vc})
 
 
+def gqa_verify_paged(p, c: AttnConfig, x, cache, tables, positions, active,
+                     nvalid):
+    """Speculative verify: S = draft_len+1 tokens per lane in ONE forward
+    pass, so the streamed weight working set amortizes over up to S tokens
+    per lane instead of 1 (the GPP low-utilization fix for decode).
+    x: (B, S, D); positions: (B,) per-lane START positions; nvalid: (B,)
+    real tokens per lane — rows past it write null block 0 and their
+    logits are ignored by the engine.  The paged-attention read path is
+    position-exact for S > 1 already (query row s sits at positions[b]+s),
+    so verify rides the same kernel as decode."""
+    S = x.shape[1]
+    pos2 = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q, k, v = gqa_project_qkv(p, c, x, pos2)
+    kc = _paged_write_multi(cache["k"], tables, positions, active, nvalid, k)
+    vc = _paged_write_multi(cache["v"], tables, positions, active, nvalid, v)
+    out = _gqa_paged_attend(c, q, kc, vc, tables, positions)
+    return (dense(out, p["w_o"], mode=c.dense_mode, contract_dims=2),
+            {"k": kc, "v": vc})
+
+
 def _mla_paged_attend(p, c: AttnConfig, q, ckv, kr, tables, positions,
                       *, prefill: bool):
     """Dispatch the paged MLA read.  "ref" gathers the latent pools and runs
@@ -491,7 +528,7 @@ def _mla_paged_attend(p, c: AttnConfig, q, ckv, kr, tables, positions,
         if prefill:
             mask = causal_mask(q.shape[1], ckv_seq.shape[1], positions[0])
         else:
-            mask = paged_mask(positions, ckv_seq.shape[1])
+            mask = paged_mask(positions, ckv_seq.shape[1], S=q.shape[1])
         return _mla_attend(p, c, q, ckv_seq, kr_seq, mask)
     nope = c.head_dim
     q_nope, q_rope = q[..., :nope], q[..., nope:]
@@ -528,6 +565,24 @@ def mla_decode_paged(p, c: AttnConfig, x, cache, tables, positions, active):
                              c_kv_new[:, 0])
     kr = _paged_write_token(cache["k_rope"], tables, positions, active,
                             k_rope_new[:, 0])
+    out = _mla_paged_attend(p, c, q, ckv, kr, tables, positions,
+                            prefill=False)
+    return out, {"c_kv": ckv, "k_rope": kr}
+
+
+def mla_verify_paged(p, c: AttnConfig, x, cache, tables, positions, active,
+                     nvalid):
+    """Speculative verify over the compressed-latent pools — see
+    `gqa_verify_paged` for the contract; the per-row position vector
+    (positions[b] + s) drives both rope and the paged mask."""
+    S = x.shape[1]
+    pos2 = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    q = _mla_q(p, c, x, pos2)
+    c_kv_new, k_rope_new = _mla_latent(p, c, x, pos2)
+    ckv = _paged_write_multi(cache["c_kv"], tables, positions, active,
+                             nvalid, c_kv_new)
+    kr = _paged_write_multi(cache["k_rope"], tables, positions, active,
+                            nvalid, k_rope_new)
     out = _mla_paged_attend(p, c, q, ckv, kr, tables, positions,
                             prefill=False)
     return out, {"c_kv": ckv, "k_rope": kr}

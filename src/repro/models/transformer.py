@@ -561,6 +561,27 @@ def _block_decode_paged(cfg, kind, p, x, cache, tables, positions, active):
     return x + h, cache
 
 
+def _block_verify_paged(cfg, kind, p, x, cache, tables, positions, active,
+                        nvalid):
+    ac = _attn_cfg(cfg, kind)
+    base = kind.split(":")[0]
+    tb = _group_table(cfg, kind, tables)
+    h = rmsnorm(p["ln1"], x)
+    if ac.is_mla:
+        h, cache = attn.mla_verify_paged(p["attn"], ac, h, cache, tb,
+                                         positions, active, nvalid)
+    else:
+        h, cache = attn.gqa_verify_paged(p["attn"], ac, h, cache, tb,
+                                         positions, active, nvalid)
+    x = x + h
+    h = rmsnorm(p["ln2"], x)
+    if base == "moe":
+        h = moe_mod.moe_apply(p["moe"], _moe_cfg(cfg), h)
+    else:
+        h = mlp(p["mlp"], h, cfg.act, dense_mode=cfg.dense_kernel)
+    return x + h, cache
+
+
 def _embed_tokens(params, cfg: ModelConfig, tokens):
     x = embed(params["embed"], tokens)
     if cfg.embed_scale:
@@ -653,6 +674,51 @@ def decode_step_paged(params: Pytree, cfg: ModelConfig, tokens, caches,
             p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
             x, c_out = _block_decode_paged(cfg, kind, p, x, cache[f"b{i}"],
                                            tables, positions, active)
+            new_caches[f"b{i}"] = c_out
+        return x, new_caches
+
+    x, blk_caches = jax.lax.scan(body, x, (params["blocks"], caches["blocks"]))
+    logits = _logits_head(params, cfg, x)
+    return logits, {"prefix": new_prefix, "blocks": blk_caches}
+
+
+def verify_step_paged(params: Pytree, cfg: ModelConfig, tokens, caches,
+                      tables, positions, active, nvalid):
+    """Batched speculative-verify step: score S = draft_len+1 tokens per
+    lane in ONE forward pass over the paged pools — the GPP amortization
+    move for decode, where the streamed weight working set otherwise buys
+    a single token per lane.
+
+    tokens: (slots, S) — row = [last produced token, draft_1..draft_k,
+      pads]; tables/positions/active as in `decode_step_paged` (positions
+      are per-lane START positions — query row s sits at positions[b]+s);
+    nvalid: (slots,) int32 — real tokens per lane (1 + its draft length).
+      Rows past nvalid write null block 0 and yield garbage logits the
+      engine never reads, so this ONE (slots, S) shape serves every
+      draft-length / acceptance pattern — the third and final jitted step
+      shape next to prefill_chunk and decode_step_paged.
+
+    Returns (logits (slots, S, vocab), caches): logits[b, i] scores the
+    token AFTER tokens[b, i], exactly what acceptance sampling compares
+    against draft_{i+1}.
+    """
+    x = _embed_tokens(params, cfg, tokens)
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c = _block_verify_paged(cfg, kind, p, x, c, tables, positions,
+                                   active, nvalid)
+        new_prefix.append(c)
+
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x = carry
+        ws, cache = xs
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            p = shared if kind.startswith("shared_attn") else ws[f"b{i}"]
+            x, c_out = _block_verify_paged(cfg, kind, p, x, cache[f"b{i}"],
+                                           tables, positions, active, nvalid)
             new_caches[f"b{i}"] = c_out
         return x, new_caches
 

@@ -322,6 +322,26 @@ class PagedKVCache:
         self.released[lane] = expire_end
         return freed
 
+    def truncate_blocks(self, lane: int, keep_blocks: int) -> int:
+        """Roll back the lane's TAIL mappings so only the first
+        `keep_blocks` logical blocks stay mapped (speculative-decode
+        rollback: blocks ensured for rejected draft positions go straight
+        back to the allocator).  Stale KV rows inside kept blocks need no
+        scrubbing — the position-exact masks hide every row at or beyond
+        the lane's next query position, and later writes overwrite them in
+        place (the same argument that covers prefill-chunk pad rows).
+        Returns the number of blocks freed."""
+        if keep_blocks < 0:
+            raise ValueError("keep_blocks >= 0")
+        have = int(self.num_mapped[lane])
+        if keep_blocks >= have:
+            return 0
+        blocks = [int(b) for b in self.tables[lane, keep_blocks:have] if b]
+        freed = self._release(blocks) if blocks else 0
+        self.tables[lane, keep_blocks:have] = 0
+        self.num_mapped[lane] = keep_blocks
+        return freed
+
     def assert_writable(self, lane: int, start_pos: int, end_pos: int) -> None:
         """No-write-aliasing guard: every mapped block covering token span
         [start_pos, end_pos) must be held by this lane alone (the prefix
@@ -541,6 +561,11 @@ class GroupedPagedCache:
             if h is not None:
                 freed += g.release_expired(lane, pos, h)
         return freed
+
+    def truncate_blocks(self, lane: int, keep_blocks: int) -> int:
+        """Speculative rollback across every group (logical layouts are
+        identical, so one keep-count serves all).  Returns blocks freed."""
+        return sum(g.truncate_blocks(lane, keep_blocks) for g in self.groups)
 
     def assert_writable(self, lane: int, start_pos: int, end_pos: int) -> None:
         for g in self.groups:

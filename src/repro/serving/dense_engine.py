@@ -144,10 +144,15 @@ class DenseServingEngine:
                     "prefill_tokens": prefill_tokens,
                     "decode_tokens": 0,
                     "queue_depth": len(self._queue),
-                    # schema parity with the paged engine's prefix-cache
-                    # metrics: the dense engine never shares KV
+                    # schema parity with the paged engine's prefix-cache and
+                    # speculation metrics: the dense engine never shares KV
+                    # and never speculates
                     "prefix_hit_tokens": 0,
                     "blocks_shared": 0,
+                    "verify_tokens": 0,
+                    "drafted_tokens": 0,
+                    "accepted_tokens": 0,
+                    "acceptance_rate": 0.0,
                 })
                 return True
             return False
@@ -201,6 +206,10 @@ class DenseServingEngine:
             "queue_depth": len(self._queue),
             "prefix_hit_tokens": 0,
             "blocks_shared": 0,
+            "verify_tokens": 0,
+            "drafted_tokens": 0,
+            "accepted_tokens": 0,
+            "acceptance_rate": 0.0,
         })
         return True
 

@@ -11,14 +11,30 @@ maps previously computed prompt-prefix blocks straight into the lane's
 tables and prefill skips those chunks entirely — the redundant re-prefill
 bytes never cross HBM).
 
-Exactly TWO step shapes are jit-compiled, independent of prompt lengths:
+Exactly THREE step shapes are jit-compiled, independent of prompt lengths,
+draft lengths, and acceptance patterns:
 
   * `prefill_chunk`: (1, chunk) tokens — one chunk of one lane's (padded)
     prompt, scattering per-token KV writes through the lane's block tables
     (per-token because a prefix-cache hit may start a chunk mid-block);
   * `decode_step_paged`: (slots, 1) tokens with PER-LANE position vectors —
     heterogeneous lanes decode in one call (the seed engine ran one call per
-    distinct position and re-traced per prompt length).
+    distinct position and re-traced per prompt length);
+  * `verify_step_paged`: (slots, draft_len+1) tokens — the speculative-
+    decoding verify burst (ServeConfig.speculation): drafts mined from the
+    request's own history / the prefix radix tree (`ngram_propose` /
+    `PrefixCache.suffix_lookup` — no weights streamed to draft) or from an
+    optional small draft model are scored in ONE forward pass, so the
+    streamed weight working set is amortized over up to draft_len+1 tokens
+    per lane instead of 1.  Per-lane shorter drafts are masked by an
+    `nvalid` vector (spare rows write null block 0), so one shape covers
+    every acceptance pattern; steps where no lane drafted use the plain
+    decode shape.  Rejected drafts roll back by block-table truncation
+    (`GroupedPagedCache.truncate_blocks`) — stale pool rows are hidden by
+    the position-exact masks and overwritten in place, the prefill-pad
+    argument again.  Accepted-token bursts stay under the scheduler's flat
+    token budget (`core.schedule.plan_verify_budget`), and the output
+    stream is token-for-token identical with speculation on or off.
 
 Sampling is deterministic: greedy by default; with temperature > 0 every
 token draw uses a key folded from (ServeConfig.seed, request id, token
@@ -48,7 +64,7 @@ from repro.configs.base import ModelConfig
 from repro.core.schedule import plan_serve_chunk, round_up, tokens_per_step_cov
 from repro.models import transformer as tf
 from repro.serving.cache import GroupedPagedCache, PagedKVCache
-from repro.serving.prefix import PrefixCache
+from repro.serving.prefix import PrefixCache, ngram_propose
 from repro.serving.scheduler import ChunkedPrefillScheduler, Request
 
 Pytree = Any
@@ -85,6 +101,16 @@ class ServeConfig:
     # cfg.prefix_cache_blocks
     prefix_cache: "bool | None" = None
     prefix_cache_blocks: "int | None" = None
+    # speculative decoding (paged engine only); None/0 = cfg.speculation /
+    # cfg.draft_len.  draft_source picks the proposal mechanism: "self" =
+    # prompt-lookup n-grams over the lane's own history with a fallback to
+    # the prefix radix tree's stored sequences (no extra weights streamed);
+    # "model" = greedy rollout of a small draft model passed to the engine
+    # (make_engine / ServingEngine `draft_model=(cfg, params)`), falling
+    # back to "self" when none was provided.
+    speculation: "bool | None" = None
+    draft_len: int = 0
+    draft_source: str = "self"
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -121,7 +147,8 @@ def sample_token(serve: ServeConfig, rid: int, token_idx: int,
 class ServingEngine:
     """Paged-KV continuous-batching engine (see module docstring)."""
 
-    def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params: Pytree, serve: ServeConfig,
+                 draft_model: "tuple[ModelConfig, Pytree] | None" = None):
         if serve.dense_kernel is not None:
             cfg = cfg.with_(dense_kernel=serve.dense_kernel)
         if serve.paged_attn_kernel is not None:
@@ -163,8 +190,31 @@ class ServingEngine:
                          else cfg.prefix_cache_blocks)
         self.prefix = (PrefixCache(self.kv, max_blocks=prefix_blocks)
                        if prefix_on else None)
+
+        # speculative decoding: drafts mined host-side (or by a small draft
+        # model), verified in one batched (slots, draft_len+1) call
+        spec_on = (serve.speculation if serve.speculation is not None
+                   else cfg.speculation)
+        self.draft_len = (serve.draft_len or cfg.draft_len) if spec_on else 0
+        self.draft_source = serve.draft_source
+        self._draft_cfg = self._draft_params = None
+        if draft_model is not None and spec_on \
+                and serve.draft_source == "model":
+            self._draft_cfg, self._draft_params = draft_model
+            self._draft_window = 16      # fixed (1, W) rollout shape: one
+            #                              compile regardless of context len
+            dcfg = self._draft_cfg
+
+            def _draft_fwd(params, toks):
+                return tf.forward(params, dcfg, {"tokens": toks})
+
+            self._draft_fwd = jax.jit(_draft_fwd)
+
         self.scheduler = ChunkedPrefillScheduler(
-            self.kv, slots=serve.slots, chunk=chunk, prefix=self.prefix)
+            self.kv, slots=serve.slots, chunk=chunk, prefix=self.prefix,
+            draft_len=self.draft_len,
+            draft_fn=self._draft_for if self.draft_len else None,
+            token_budget=budget)
         specs = tf.paged_cache_specs(cfg, num_blocks, bs)
         self.caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
@@ -181,9 +231,10 @@ class ServingEngine:
         self._reclaims = any(h is not None for h in self.group_horizons)
 
         # trace_counts increments when jax TRACES (= compiles) a step fn —
-        # the re-jit regression tests assert it stays at {1, 1} across
-        # arbitrary prompt-length mixes.
-        self.trace_counts = {"prefill_chunk": 0, "decode": 0}
+        # the re-jit regression tests assert it stays at {1, 1, 1} across
+        # arbitrary prompt-length / draft-length / acceptance mixes
+        # ("verify" stays 0 with speculation off).
+        self.trace_counts = {"prefill_chunk": 0, "decode": 0, "verify": 0}
 
         def _prefill(params, caches, toks, table_rows, start_pos, last_idx):
             self.trace_counts["prefill_chunk"] += 1
@@ -195,8 +246,14 @@ class ServingEngine:
             return tf.decode_step_paged(params, cfg, toks, caches, tables,
                                         positions, active)
 
+        def _verify(params, caches, toks, tables, positions, active, nvalid):
+            self.trace_counts["verify"] += 1
+            return tf.verify_step_paged(params, cfg, toks, caches, tables,
+                                        positions, active, nvalid)
+
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        self._verify = jax.jit(_verify)
 
         self._results: dict[int, list[int]] = {}
         self._next_id = 0
@@ -258,9 +315,64 @@ class ServingEngine:
     def prefix_hit_rate(self) -> float:
         return self.prefix.hit_rate() if self.prefix else 0.0
 
+    def acceptance_rate(self) -> float:
+        """Accepted / drafted tokens over the engine's lifetime (0.0 with
+        speculation off or nothing drafted yet)."""
+        drafted = sum(m["drafted_tokens"] for m in self.metrics)
+        accepted = sum(m["accepted_tokens"] for m in self.metrics)
+        return accepted / drafted if drafted else 0.0
+
     # ------------------------------------------------------------ engine
     def _sample(self, logits_row, req: Request) -> int:
         return sample_token(self.serve, req.rid, len(req.produced), logits_row)
+
+    # ---------------------------------------------------------- drafting
+    def _draft_for(self, req: Request, cap: int) -> np.ndarray:
+        """Scheduler hook: propose up to `cap` draft tokens for `req`.
+
+        "self" drafting is pure token statistics over tokens the system has
+        already seen — the lane's own prompt+produced history first
+        (`ngram_propose`), then the prefix radix tree's stored sequences
+        (`PrefixCache.suffix_lookup`, cross-request repetition) — so no
+        weights are streamed to produce the guess.  "model" drafting rolls
+        out the small draft model greedily.  Wrong drafts only cost their
+        share of one verify pass; the acceptance loop keeps the emitted
+        stream exact either way."""
+        if cap < 1:
+            return np.zeros((0,), np.int32)
+        hist = np.concatenate(
+            [req.prompt, np.asarray(req.produced, np.int32)])
+        if self._draft_params is not None:
+            d = self._draft_with_model(hist, cap)
+        else:
+            d = ngram_propose(hist, cap)
+            if len(d) == 0 and self.prefix is not None:
+                d = self.prefix.suffix_lookup(hist, cap)
+        d = np.asarray(d, np.int32)[:cap]
+        if len(d):
+            # a draft model with a different vocab may propose ids the
+            # target can't embed; clamp — a wrong guess is just rejected
+            d = np.clip(d, 0, self.cfg.vocab_size - 1)
+        return d
+
+    def _draft_with_model(self, hist: np.ndarray, cap: int) -> np.ndarray:
+        """Greedy draft-model rollout over a fixed (1, W) token window —
+        one compiled shape regardless of context length; the rollout cost
+        is the draft model's (small) weight stream, repaid when accepted
+        tokens amortize the TARGET model's stream."""
+        W = self._draft_window
+        seq = [int(t) for t in hist[-W:]]
+        out: "list[int]" = []
+        for _ in range(cap):
+            window = seq[-W:]
+            n = len(window)
+            toks = np.zeros((1, W), np.int32)
+            toks[0, :n] = window
+            logits = self._draft_fwd(self._draft_params, jnp.asarray(toks))
+            t = int(np.argmax(np.asarray(logits[0, n - 1], np.float32)))
+            out.append(t)
+            seq.append(t)
+        return np.asarray(out, np.int32)
 
     def _tables_jnp(self, lane: "int | None" = None):
         """Per-group block tables as a jit-stable tuple: the whole (slots,
@@ -339,6 +451,7 @@ class ServingEngine:
         # any write this step
         self._apply_pending_copies()
         prefill_tokens = decode_tokens = 0
+        verify_tokens = drafted_tokens = accepted_tokens = 0
         read_tokens = 0
         # per-call attention-read accounting: the gather path materializes
         # every participant's full (MB*bs) logical sequence in HBM; the
@@ -411,7 +524,68 @@ class ServingEngine:
                 self._maybe_finish(lane, tok)
             decode_tokens = len(plan.decode_lanes)
 
-        tokens = prefill_tokens + decode_tokens
+        if plan.verify:
+            v = plan.verify
+            slots = self.serve.slots
+            S = self.draft_len + 1
+            toks = np.zeros((slots, S), np.int32)
+            positions = np.zeros((slots,), np.int32)
+            active = np.zeros((slots,), bool)
+            nvalid = np.zeros((slots,), np.int32)
+            for lane, draft in zip(v.lanes, v.drafts):
+                req = self.scheduler.request_at(lane)
+                toks[lane, 0] = req.produced[-1]
+                toks[lane, 1 : 1 + len(draft)] = draft
+                positions[lane] = req.decode_pos
+                active[lane] = True
+                nvalid[lane] = 1 + len(draft)
+                read_tokens += req.decode_pos + 1 + len(draft)
+                # the whole write span [decode_pos, decode_pos+1+len(draft))
+                # must be exclusively owned: shared prefix blocks all sit
+                # below decode_pos (tail forked at admission) and draft
+                # blocks were freshly ensured — assert, never mutate shares
+                self.kv.assert_writable(lane, req.decode_pos,
+                                        req.decode_pos + 1 + len(draft))
+            logits, self.caches = self._verify(
+                self.params, self.caches, jnp.asarray(toks),
+                self._tables_jnp(), jnp.asarray(positions),
+                jnp.asarray(active), jnp.asarray(nvalid))
+            attn_bytes_gather += slots * mb_rows * self._kv_token_bytes
+            attn_bytes_stream += sum(_stream_bytes(l) for l in range(slots))
+            logits_np = np.asarray(logits, np.float32)
+            for lane, draft in zip(v.lanes, v.drafts):
+                req = self.scheduler.request_at(lane)
+                nd = len(draft)
+                drafted_tokens += nd
+                verify_tokens += nd + 1
+                # greedy-exact acceptance: every emitted token is sampled
+                # from the TARGET logits at its logical token index (the
+                # same key plain decode would use), so the stream is
+                # token-for-token identical with speculation off; draft
+                # d_{i+1} survives only if it EQUALS the sampled token
+                tok = -1
+                for i in range(nd + 1):
+                    tok = self._sample(logits_np[lane, i], req)
+                    req.decode_pos += 1
+                    req.produced.append(tok)
+                    done = req.remaining <= 0 or (
+                        self.serve.eos_token is not None
+                        and tok == self.serve.eos_token)
+                    matched = i < nd and tok == draft[i]
+                    if matched:
+                        accepted_tokens += 1
+                    if done or not matched:
+                        break
+                # rollback: drop table entries mapped past the accepted
+                # point (blocks ensured for rejected drafts go back to the
+                # pool); stale rows inside kept blocks are masked/overwritten
+                self.kv.truncate_blocks(
+                    lane, -(-req.decode_pos // self.block_size))
+                if self._reclaims:
+                    self.kv.release_expired(lane, req.decode_pos)
+                self._maybe_finish(lane, tok)
+
+        tokens = prefill_tokens + decode_tokens + verify_tokens
         self.metrics.append({
             "step": len(self.metrics),
             "tokens": tokens,
@@ -421,6 +595,14 @@ class ServingEngine:
             "prefill_real_tokens": (plan.prefill.real_tokens
                                     if plan.prefill else 0),
             "decode_tokens": decode_tokens,
+            # speculative decoding: fed verify tokens (1 + draft per lane),
+            # drafts proposed, drafts accepted (emitted without a fresh
+            # weight pass of their own)
+            "verify_tokens": verify_tokens,
+            "drafted_tokens": drafted_tokens,
+            "accepted_tokens": accepted_tokens,
+            "acceptance_rate": (accepted_tokens / drafted_tokens
+                                if drafted_tokens else 0.0),
             "blocks_in_use": self.kv.blocks_in_use,
             "free_blocks": self.kv.num_free,
             "queue_depth": self.scheduler.queue_depth,
@@ -473,11 +655,12 @@ class ServingEngine:
         return self._results
 
 
-def make_engine(cfg: ModelConfig, params: Pytree, serve: ServeConfig):
+def make_engine(cfg: ModelConfig, params: Pytree, serve: ServeConfig,
+                draft_model: "tuple[ModelConfig, Pytree] | None" = None):
     """Paged engine when the architecture supports it, dense-cache fallback
-    (recurrent/cross blocks) otherwise."""
+    (recurrent/cross blocks — no speculation there) otherwise."""
     if tf.supports_paged(cfg if serve.dense_kernel is None
                          else cfg.with_(dense_kernel=serve.dense_kernel)):
-        return ServingEngine(cfg, params, serve)
+        return ServingEngine(cfg, params, serve, draft_model=draft_model)
     from repro.serving.dense_engine import DenseServingEngine
     return DenseServingEngine(cfg, params, serve)

@@ -76,6 +76,33 @@ class PrefixHit:
 
 _MISS = PrefixHit(0, ())
 
+_NO_DRAFT = np.zeros((0,), np.int32)
+
+
+def ngram_propose(tokens, k: int, *, max_ngram: int = 3,
+                  min_ngram: int = 1) -> np.ndarray:
+    """Prompt-lookup self-drafting: find the LATEST earlier occurrence of
+    the sequence's own trailing n-gram and propose the up-to-`k` tokens
+    that followed it (longest n tried first).  Pure token statistics — no
+    weights are streamed to produce the draft, so every accepted token is
+    a free amortization of the verify pass's weight read (the GPP
+    bytes-per-useful-token argument).  Returns (d,) int32 with
+    0 <= d <= k; empty = no draftable repetition."""
+    toks = np.asarray(tokens, np.int32)
+    L = int(toks.shape[0])
+    if k < 1 or L < min_ngram + 1:
+        return _NO_DRAFT
+    for n in range(min(max_ngram, L - 1), min_ngram - 1, -1):
+        pattern = toks[L - n:]
+        # windows over toks[:L-1]: every occurrence has a continuation,
+        # and the trailing n-gram itself (start L-n) is excluded
+        windows = np.lib.stride_tricks.sliding_window_view(toks[: L - 1], n)
+        hits = np.nonzero((windows == pattern).all(axis=1))[0]
+        if len(hits):
+            i = int(hits[-1])             # last occurrence: recency wins
+            return toks[i + n : i + n + k].copy()
+    return _NO_DRAFT
+
 
 class _Node:
     __slots__ = ("tokens", "blocks", "tail_tokens", "tail_blocks",
@@ -503,6 +530,60 @@ class PrefixCache:
                                    for b in node.blocks[gi]]
                 if node.tail_blocks is not None and node.tail_blocks[gi]:
                     node.tail_blocks[gi] = int(o2n[node.tail_blocks[gi]])
+
+    # ------------------------------------------------------------ drafting
+    def _stored_sequences(self) -> "list[np.ndarray]":
+        """Token sequences stored in the tree — one per leaf or
+        tail-carrying node, reconstructed root-to-node by ascending
+        parents — most recently used first.  These are the token streams
+        the index has KV for; as a side effect of being a radix tree over
+        past traffic they double as the cross-request corpus for
+        prompt-lookup drafting (`suffix_lookup`)."""
+        seqs: "list[tuple[int, np.ndarray]]" = []
+        for node in self._walk():
+            if node is self.root and node.tail_tokens is None:
+                continue
+            if node.children and node.tail_tokens is None:
+                continue                   # interior span: a longer stored
+                #                            sequence covers it already
+            parts = []
+            n = node
+            while n is not None:
+                parts.append(n.tokens)
+                n = n.parent
+            toks = np.concatenate(parts[::-1])
+            if node.tail_tokens is not None:
+                toks = np.concatenate([toks, node.tail_tokens])
+            if len(toks):
+                seqs.append((node.last_used, toks))
+        seqs.sort(key=lambda t: -t[0])
+        return [t for _, t in seqs]
+
+    def suffix_lookup(self, context, k: int, *, max_ngram: int = 3,
+                      min_ngram: int = 1) -> np.ndarray:
+        """Cross-request prompt-lookup: search the stored sequences for the
+        trailing n-gram of `context` and return the up-to-`k` tokens that
+        followed it (longest n first; most-recently-used sequence first;
+        within a sequence the last occurrence wins).  Complements
+        `ngram_propose`'s lane-local search when the repetition lives in
+        ANOTHER request's history (multi-turn traffic).  Returns (d,)
+        int32, empty on no match."""
+        ctx = np.asarray(context, np.int32)
+        L = int(ctx.shape[0])
+        if k < 1 or L < min_ngram:
+            return _NO_DRAFT
+        for n in range(min(max_ngram, L), min_ngram - 1, -1):
+            pattern = ctx[L - n:]
+            for seq in self._stored_sequences():
+                if len(seq) <= n:
+                    continue
+                windows = np.lib.stride_tricks.sliding_window_view(
+                    seq[: len(seq) - 1], n)
+                hits = np.nonzero((windows == pattern).all(axis=1))[0]
+                if len(hits):
+                    i = int(hits[-1])
+                    return seq[i + n : i + n + k].astype(np.int32).copy()
+        return _NO_DRAFT
 
     # ----------------------------------------------------------- test hooks
     def held_blocks(self) -> "tuple[dict[int, int], ...]":

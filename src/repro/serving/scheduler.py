@@ -47,7 +47,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.schedule import round_up
+from repro.core.schedule import plan_verify_budget, round_up
 from repro.serving.cache import GroupedPagedCache, PagedKVCache  # noqa: F401
 
 
@@ -88,26 +88,44 @@ class PrefillWork:
 
 
 @dataclasses.dataclass(frozen=True)
+class VerifyWork:
+    """One batched speculative-verify call: every decode-phase lane rides
+    it (draftless lanes with an empty draft — their row degenerates to
+    plain decode), so across a mixed workload the engine still traces ONE
+    verify shape and ONE decode shape."""
+    lanes: "tuple[int, ...]"              # decode-phase lanes, rid order
+    drafts: "tuple[tuple[int, ...], ...]"  # per lane, possibly ()
+
+    @property
+    def draft_tokens(self) -> int:
+        return sum(len(d) for d in self.drafts)
+
+
+@dataclasses.dataclass(frozen=True)
 class StepPlan:
     prefill: Optional[PrefillWork]
     decode_lanes: "tuple[int, ...]"
     preempted: "tuple[int, ...]"      # rids preempted while planning
     prefix_hit_tokens: int = 0        # context tokens served from the prefix
                                       # cache by admissions in this plan
+    verify: "VerifyWork | None" = None  # replaces decode_lanes when set
 
     @property
     def scheduled_tokens(self) -> int:
         """Tokens this step carries (pads included: they occupy the same
         compute/HBM footprint — this is the flatness quantity)."""
+        v = (sum(1 + len(d) for d in self.verify.drafts)
+             if self.verify else 0)
         return (len(self.prefill.tokens) if self.prefill else 0) \
-            + len(self.decode_lanes)
+            + len(self.decode_lanes) + v
 
 
 class ChunkedPrefillScheduler:
     PREFILL = "prefill"
     DECODE = "decode"
 
-    def __init__(self, cache, *, slots: int, chunk: int, prefix=None):
+    def __init__(self, cache, *, slots: int, chunk: int, prefix=None,
+                 draft_len: int = 0, draft_fn=None, token_budget: int = 0):
         bs = cache.cfg.block_size
         if chunk < 1 or chunk % bs:
             raise ValueError(f"chunk {chunk} must be a positive multiple of "
@@ -115,10 +133,19 @@ class ChunkedPrefillScheduler:
         if prefix is not None and not isinstance(cache, GroupedPagedCache):
             raise ValueError("prefix caching needs a GroupedPagedCache "
                              "(per-group tables + refcounted shares)")
+        if draft_len < 0:
+            raise ValueError("draft_len >= 0")
         self.cache = cache
         self.slots = slots
         self.chunk = chunk
         self.prefix = prefix
+        # speculative decoding: draft_fn(req, cap) -> up-to-cap int tokens
+        # the engine guesses will follow req's stream; verify scores them
+        # in one batched call.  token_budget bounds drafts to the step's
+        # flatness slack (plan_verify_budget).
+        self.draft_len = draft_len
+        self.draft_fn = draft_fn
+        self.token_budget = token_budget
         self.waiting: "deque[Request]" = deque()
         self.running: "dict[int, Request]" = {}     # lane -> Request
         self.phase: "dict[int, str]" = {}           # lane -> PREFILL|DECODE
@@ -288,9 +315,49 @@ class ChunkedPrefillScheduler:
             req.prefill_pos = start + self.chunk
         if prefill is None and not decode:
             return None
+        verify = self._plan_verify(prefill, decode)
+        if verify is not None:
+            decode = []                    # those lanes ride the verify call
         # no victim re-filter needed: requests are visited oldest-first and
         # victims are strictly younger than the requester, so a lane already
         # planned can never have been preempted while planning
         return StepPlan(prefill=prefill, decode_lanes=tuple(decode),
                         preempted=tuple(preempted),
-                        prefix_hit_tokens=hit_tokens)
+                        prefix_hit_tokens=hit_tokens, verify=verify)
+
+    def _plan_verify(self, prefill: "PrefillWork | None",
+                     decode: "list[int]") -> "VerifyWork | None":
+        """Attach speculative drafts to this step's decode lanes, bounded by
+        the flatness slack `plan_verify_budget` leaves after the prefill
+        chunk and the decode tokens (drafts mostly ride decode-only steps —
+        a prefill-carrying step's chunk already fills the budget).  Drafts
+        NEVER preempt or evict: a lane's draft shrinks until its blocks fit
+        the free pool (speculative tokens are the lowest-priority bytes in
+        the system).  Returns None when no lane drafted anything — the step
+        then uses the plain decode shape."""
+        if self.draft_len < 1 or self.draft_fn is None or not decode:
+            return None
+        avail = plan_verify_budget(
+            token_budget=self.token_budget,
+            prefill_tokens=len(prefill.tokens) if prefill else 0,
+            decode_lanes=len(decode))
+        drafts: "list[tuple[int, ...]]" = []
+        for lane in decode:                # rid order: oldest drafts first
+            req = self.running[lane]
+            # remaining-1: the verify emits >= 1 token, so at most
+            # remaining-1 drafts can ever be accepted — also keeps the
+            # write span inside the submit()-validated table extent
+            cap = min(self.draft_len, req.remaining - 1, avail)
+            d = (np.asarray(self.draft_fn(req, cap), np.int32)[:cap]
+                 if cap > 0 else np.zeros((0,), np.int32))
+            while len(d) and self.cache.blocks_needed(
+                    lane, req.decode_pos + len(d)) > self.cache.num_free:
+                d = d[:-1]
+            if len(d) and not self.cache.ensure(lane,
+                                                req.decode_pos + len(d)):
+                d = d[:0]                  # unreachable: fit checked above
+            avail -= len(d)
+            drafts.append(tuple(int(t) for t in d))
+        if not any(drafts):
+            return None
+        return VerifyWork(lanes=tuple(decode), drafts=tuple(drafts))

@@ -160,7 +160,8 @@ class TestBoundedCompilation:
         for p in _prompts(cfg, len(lengths), lengths):
             paged.submit(p, max_new_tokens=3)
         paged.run()
-        assert paged.trace_counts == {"prefill_chunk": 1, "decode": 1}
+        assert paged.trace_counts == {"prefill_chunk": 1, "decode": 1,
+                                      "verify": 0}
 
         dense = DenseServingEngine(cfg, params, ServeConfig(slots=2, max_len=64))
         for p in _prompts(cfg, len(lengths), lengths):
@@ -377,4 +378,5 @@ class TestAttnReadMetrics:
         assert ref_eng.paged_attn_mode == "ref"
         assert ker_eng.paged_attn_mode == "interpret"
         assert ker_streams == ref_streams
-        assert ker_eng.trace_counts == {"prefill_chunk": 1, "decode": 1}
+        assert ker_eng.trace_counts == {"prefill_chunk": 1, "decode": 1,
+                                        "verify": 0}

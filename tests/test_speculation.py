@@ -1,0 +1,267 @@
+"""Speculative decoding in the paged engine: self-drafting (prompt-lookup
+n-grams + prefix radix tree), the batched verify step, GPP verify budgeting,
+rollback safety of rejected drafts, and exactness — greedy AND temperature
+streams must be token-for-token identical with speculation on or off."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.schedule import plan_verify_budget
+from repro.models import registry
+from repro.models import transformer as tf
+from repro.serving import DenseServingEngine, ServeConfig, ServingEngine
+from repro.serving.cache import PagedKVCache
+from repro.serving.prefix import ngram_propose
+
+pytestmark = pytest.mark.tier1
+
+PARITY_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "deepseek-v2-lite-16b")
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for arch in PARITY_ARCHS:
+        cfg = registry.get_config(arch, smoke=True)
+        out[arch] = (cfg, tf.init_params(cfg, jax.random.PRNGKey(0)))
+    return out
+
+
+def _spec_prompts(cfg):
+    """Mixed lengths; two repetitive prompts so self-drafting fires and one
+    short irregular prompt so some steps carry no drafts (plain decode)."""
+    v = cfg.vocab_size
+    return [
+        np.tile([5 % v, 6 % v, 7 % v, 8 % v], 6).tolist(),
+        [1 % v, 2 % v, 3 % v],
+        np.tile([9 % v, 3 % v], 10).tolist(),
+    ]
+
+
+def _run(cfg, params, *, speculation, prompts, max_new=24, draft_model=None,
+         **kw):
+    serve = ServeConfig(slots=2, max_len=128, speculation=speculation,
+                        draft_len=4 if speculation else 0, **kw)
+    eng = ServingEngine(cfg, params, serve, draft_model=draft_model)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=max_new)
+    return eng, eng.run()
+
+
+# --------------------------------------------------------------- drafting
+class TestNgramPropose:
+    def test_longest_ngram_continuation(self):
+        toks = np.array([5, 6, 7, 8, 5, 6, 7, 8, 5, 6, 7], np.int32)
+        # trailing trigram [5,6,7] matched at the start -> continues 8,5,6
+        assert ngram_propose(toks, 3).tolist() == [8, 5, 6]
+
+    def test_k_truncates(self):
+        toks = np.tile([9, 3], 8).astype(np.int32)
+        assert ngram_propose(toks, 1).tolist() == [9]
+
+    def test_last_occurrence_wins(self):
+        # [1,2] occurs twice with different continuations; the most recent
+        # one (->7) is the better local predictor
+        toks = np.array([1, 2, 5, 0, 1, 2, 7, 0, 1, 2], np.int32)
+        assert ngram_propose(toks, 1).tolist() == [7]
+
+    def test_no_match_and_short_history_return_empty(self):
+        assert len(ngram_propose(np.arange(12, dtype=np.int32), 4)) == 0
+        assert len(ngram_propose(np.array([3], np.int32), 4)) == 0
+        assert len(ngram_propose(np.zeros((0,), np.int32), 4)) == 0
+
+    def test_never_proposes_past_history(self):
+        # window excludes the trailing n-gram itself, so a match always has
+        # at least one continuation token
+        toks = np.array([4, 4], np.int32)
+        d = ngram_propose(toks, 4)
+        assert d.tolist() == [4] * len(d)
+
+
+class TestSuffixLookup:
+    def test_cross_request_repetition(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        prompt = list(range(1, 17))
+        eng, _ = _run(cfg, params, speculation=False, prompts=[prompt],
+                      max_new=4, prefix_cache=True)
+        assert eng.prefix is not None and eng.prefix.blocks_held > 0
+        # a NEW request whose context ends mid-way through the stored
+        # sequence gets the stored continuation as its draft
+        ctx = np.asarray(prompt[:6], np.int32)
+        d = eng.prefix.suffix_lookup(ctx, 4)
+        assert d.tolist() == prompt[6:10]
+        # unseen context: no draft
+        assert len(eng.prefix.suffix_lookup(
+            np.array([900, 901, 902], np.int32), 4)) == 0
+
+
+# ---------------------------------------------------------------- budget
+class TestVerifyBudget:
+    def test_slack_is_budget_minus_scheduled(self):
+        assert plan_verify_budget(token_budget=12, prefill_tokens=6,
+                                  decode_lanes=4) == 2
+        assert plan_verify_budget(token_budget=8, prefill_tokens=8,
+                                  decode_lanes=0) == 0
+
+    def test_never_negative(self):
+        assert plan_verify_budget(token_budget=4, prefill_tokens=8,
+                                  decode_lanes=2) == 0
+
+    def test_validates(self):
+        with pytest.raises(ValueError):
+            plan_verify_budget(token_budget=-1, prefill_tokens=0,
+                               decode_lanes=0)
+        with pytest.raises(ValueError):
+            plan_verify_budget(token_budget=4, prefill_tokens=-1,
+                               decode_lanes=0)
+
+
+# -------------------------------------------------------------- rollback
+class TestTruncateBlocks:
+    def kv(self):
+        return PagedKVCache(slots=2, num_blocks=9, block_size=4,
+                            max_blocks_per_seq=8)
+
+    def test_frees_tail_blocks(self):
+        kv = self.kv()
+        assert kv.ensure(0, 11)               # 3 blocks mapped
+        used = kv.blocks_in_use
+        freed = kv.truncate_blocks(0, 1)
+        assert freed == 2
+        assert kv.num_mapped[0] == 1
+        assert kv.blocks_in_use == used - 2
+        assert kv.tables[0, 1:].tolist() == [0] * 7
+        kv.check_invariants()
+
+    def test_keep_all_is_noop(self):
+        kv = self.kv()
+        assert kv.ensure(0, 7)
+        assert kv.truncate_blocks(0, 2) == 0
+        assert kv.truncate_blocks(0, 5) == 0
+        assert kv.num_mapped[0] == 2
+
+    def test_rejects_negative(self):
+        with pytest.raises(ValueError):
+            self.kv().truncate_blocks(0, -1)
+
+
+# ---------------------------------------------------------------- parity
+class TestSpeculationParity:
+    @pytest.mark.parametrize("arch", PARITY_ARCHS)
+    def test_greedy_stream_identical_on_vs_off(self, setups, arch):
+        cfg, params = setups[arch]
+        prompts = _spec_prompts(cfg)
+        on, r_on = _run(cfg, params, speculation=True, prompts=prompts)
+        off, r_off = _run(cfg, params, speculation=False, prompts=prompts)
+        assert r_on == r_off
+        on.kv.check_invariants()
+        drafted = sum(m["drafted_tokens"] for m in on.metrics)
+        assert drafted > 0                    # speculation actually engaged
+        assert on.trace_counts["verify"] == 1
+
+    def test_temperature_stream_identical_on_vs_off(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        prompts = _spec_prompts(cfg)
+        _, r_on = _run(cfg, params, speculation=True, prompts=prompts,
+                       temperature=0.7, seed=3)
+        _, r_off = _run(cfg, params, speculation=False, prompts=prompts,
+                        temperature=0.7, seed=3)
+        # sampling keys on (seed, rid, logical token index), not on which
+        # step shape produced the token — accepted verify bursts draw the
+        # same samples plain decode would have
+        assert r_on == r_off
+
+    def test_three_step_shapes_compile_once(self, setups):
+        """The whole point of the batched verify design: mixed prompt
+        lengths, draft lengths 0..draft_len, and partial/full rejection all
+        ride exactly THREE jitted shapes (chunk prefill, decode, verify)."""
+        cfg, params = setups["qwen1.5-0.5b"]
+        lengths = (4, 9, 24, 5, 17, 3)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=l).tolist()
+                   for l in lengths]
+        prompts[2] = np.tile([5, 6, 7, 8], 6).tolist()  # draft-friendly
+        serve = ServeConfig(slots=2, max_len=128, speculation=True,
+                            draft_len=4)
+        eng = ServingEngine(cfg, params, serve)
+        # phase 1: no proposals anywhere (ngram misses on every lane) ->
+        # every decode-phase step takes the plain decode shape
+        real_draft = eng.scheduler.draft_fn
+        eng.scheduler.draft_fn = lambda req, cap: np.zeros((0,), np.int32)
+        for p in prompts[:2]:
+            eng.submit(p, max_new_tokens=6)
+        eng.run()
+        assert eng.trace_counts == {"prefill_chunk": 1, "decode": 1,
+                                    "verify": 0}
+        # phase 2: proposals return, with mixed prompt lengths, draft
+        # lengths 0..draft_len, and partial/full acceptance — verify traces
+        # once and nothing else retraces
+        eng.scheduler.draft_fn = real_draft
+        for i, p in enumerate(prompts):
+            eng.submit(p, max_new_tokens=3 + 5 * (i % 3))
+        eng.run()
+        assert eng.trace_counts == {"prefill_chunk": 1, "decode": 1,
+                                    "verify": 1}
+
+    def test_draft_model_path(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        prompts = _spec_prompts(cfg)
+        on, r_on = _run(cfg, params, speculation=True, prompts=prompts,
+                        draft_source="model", draft_model=(cfg, params))
+        _, r_off = _run(cfg, params, speculation=False, prompts=prompts)
+        assert r_on == r_off
+        assert on._draft_params is not None   # really took the model path
+        assert sum(m["drafted_tokens"] for m in on.metrics) > 0
+
+
+class TestRollbackSafety:
+    @pytest.mark.parametrize("arch", ("gemma3-12b", "deepseek-v2-lite-16b"))
+    def test_garbage_drafts_never_corrupt_state(self, setups, arch):
+        """Force adversarial drafts (near-certain full rejection every
+        step): the emitted stream must stay identical to spec-off and the
+        rollback must leave tables/refcounts/pool exactly consistent —
+        including prefix-cache shared (COW) blocks below decode_pos."""
+        cfg, params = setups[arch]
+        prompts = _spec_prompts(cfg)
+        serve = ServeConfig(slots=2, max_len=128, speculation=True,
+                            draft_len=4, prefix_cache=True)
+        eng = ServingEngine(cfg, params, serve)
+
+        def garbage(req, cap):
+            return (np.arange(cap, dtype=np.int32) * 7 + 3) % cfg.vocab_size
+
+        eng.scheduler.draft_fn = garbage
+        for p in prompts:
+            eng.submit(p, max_new_tokens=24)
+        r_on = eng.run()
+        _, r_off = _run(cfg, params, speculation=False, prompts=prompts,
+                        prefix_cache=True)
+        assert r_on == r_off
+        eng.kv.check_invariants(eng.prefix.held_blocks())
+        assert sum(m["drafted_tokens"] for m in eng.metrics) > 0
+
+
+# --------------------------------------------------------------- metrics
+class TestMetricsSchema:
+    def test_paged_metrics_carry_speculation_fields(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        eng, _ = _run(cfg, params, speculation=True,
+                      prompts=_spec_prompts(cfg))
+        for m in eng.metrics:
+            for k in ("verify_tokens", "drafted_tokens", "accepted_tokens",
+                      "acceptance_rate"):
+                assert k in m
+        assert 0.0 <= eng.acceptance_rate() <= 1.0
+
+    def test_dense_engine_schema_parity(self, setups):
+        cfg, params = setups["qwen1.5-0.5b"]
+        eng = DenseServingEngine(cfg, params, ServeConfig(slots=2,
+                                                          max_len=64))
+        for p in _spec_prompts(cfg):
+            eng.submit(p, max_new_tokens=4)
+        eng.run()
+        assert eng.metrics
+        for m in eng.metrics:
+            assert m["drafted_tokens"] == 0 and m["accepted_tokens"] == 0
+            assert m["verify_tokens"] == 0 and m["acceptance_rate"] == 0.0
