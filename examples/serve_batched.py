@@ -85,6 +85,28 @@ def main():
           f"steps={len(eng.metrics)} vs {len(plain_eng.metrics)} plain "
           f"(same token streams), compiled shapes={eng.trace_counts}")
 
+    # ---- observability: demo trace + metrics snapshot --------------------
+    # obs=True turns on the telemetry layer (docs/OBSERVABILITY.md): async
+    # request spans, per-step/phase spans, modeled kernel DMA/compute
+    # lanes, and TTFT/TPOT histograms — the token stream is unchanged.
+    eng = ServingEngine(cfg, params, ServeConfig(slots=2, max_len=96,
+                                                 obs=True))
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size,
+                                size=rng.integers(4, 16)).tolist(),
+                   max_new_tokens=8)
+    eng.run()
+    eng.obs.write_trace("serve_trace.json")
+    snap = eng.obs.write_metrics("serve_metrics.jsonl",
+                                 extra={"ledger": eng.metrics.summary()})
+    ttft = snap["requests"]["ttft"]
+    util = eng.metrics.utilization_report()
+    print(f"observability: {len(eng.obs.trace)} trace events -> "
+          f"serve_trace.json (load at https://ui.perfetto.dev), "
+          f"ttft_p50={ttft['p50'] * 1e3:.1f}ms, bw_utilization "
+          f"measured={util['measured_bw_utilization']:.2f} vs "
+          f"predicted={util['predicted_bw_utilization']:.2f}")
+
 
 if __name__ == "__main__":
     main()

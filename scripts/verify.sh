@@ -98,3 +98,33 @@ eng.kv.check_invariants()
 print(f"speculation parity OK (spec == off), acceptance_rate={acc:.2f} "
       f"steps={len(eng.metrics)} traces={eng.trace_counts}")
 PY
+echo "--- observability smoke (trace + metrics through launch/serve) ---"
+OBS_DIR="$(mktemp -d)"
+trap 'rm -rf "$OBS_DIR"' EXIT
+python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+    --requests 3 --max-new 4 --slots 2 --max-len 64 \
+    --trace-out "$OBS_DIR/trace.json" --metrics-out "$OBS_DIR/metrics.jsonl"
+OBS_DIR="$OBS_DIR" python - <<'PY'
+import json, math, os
+
+d = os.environ["OBS_DIR"]
+doc = json.load(open(os.path.join(d, "trace.json")))
+evs = doc["traceEvents"]
+assert evs, "empty trace"
+pids = {e["pid"] for e in evs}
+assert {1, 2, 3} <= pids, f"missing trace tracks: {pids}"   # serving/requests/kernel
+assert any(e.get("ph") == "X" and e["name"] == "step" for e in evs)
+assert any(e.get("cat") == "modeled" for e in evs), "no kernel lanes"
+(line,) = open(os.path.join(d, "metrics.jsonl")).read().splitlines()[-1:]
+snap = json.loads(line)
+req = snap["requests"]
+for hist in ("ttft", "tpot"):
+    s = req[hist]
+    assert s["count"] > 0, f"no {hist} observations"
+    for q in ("p50", "p99"):
+        assert math.isfinite(s[q]) and s[q] > 0, (hist, q, s)
+assert snap["ledger"]["total_hbm_bytes"] > 0
+print(f"observability smoke OK: {len(evs)} trace events "
+      f"({doc['otherData']['dropped_events']} dropped), "
+      f"ttft_p50={req['ttft']['p50']:.3f}s tpot_p50={req['tpot']['p50']:.4f}s")
+PY

@@ -120,6 +120,32 @@ class ModelConfig:
                                      # and each lane's remaining quota.
                                      # ServeConfig.draft_len overrides.
 
+    # ---- observability (repro.obs; near-zero overhead when off) ----
+    obs: bool = False                # serving telemetry: request/kernel
+                                     # trace spans (Perfetto trace-event
+                                     # JSON via --trace-out), TTFT/TPOT
+                                     # histograms (JSONL via --metrics-out),
+                                     # and step wall times in the ledger.
+                                     # Off: every instrumentation site is a
+                                     # no-op (regression-gated < 5%
+                                     # tokens/sec overhead when ON in
+                                     # BENCH_serving.json).
+                                     # ServeConfig.obs overrides.
+    obs_trace_capacity: int = 65536  # trace ring-buffer capacity (events);
+                                     # once full the OLDEST events drop and
+                                     # the export's otherData.dropped_events
+                                     # counts them.
+                                     # ServeConfig.trace_capacity overrides.
+    metrics_retention: int = 0       # per-step ledger rows kept in memory
+                                     # (0 = unbounded, the test/bench
+                                     # default).  > 0: a ring of the most
+                                     # recent N rows; evicted rows fold into
+                                     # BandwidthLedger.rollup so lifetime
+                                     # totals stay exact while long serving
+                                     # runs stop growing per step.
+                                     # ServeConfig.metrics_retention
+                                     # overrides.
+
     @property
     def jdtype(self):
         return jnp.dtype(self.dtype)

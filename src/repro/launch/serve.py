@@ -63,7 +63,31 @@ def main(argv=None):
                     help="registry arch name of a small draft model for "
                          "--draft-source model (loads its smoke config "
                          "when --smoke is set)")
+    ap.add_argument("--obs", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="serving telemetry (repro.obs): request/kernel "
+                         "trace spans, TTFT/TPOT histograms, step wall "
+                         "times in the ledger (default: cfg.obs; implied "
+                         "by --trace-out/--metrics-out)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the Chrome/Perfetto trace-event JSON here "
+                         "(load at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append one JSONL metrics snapshot here (TTFT/"
+                         "TPOT p50/p99 summaries + ledger totals + "
+                         "predicted-vs-measured utilization)")
+    ap.add_argument("--trace-capacity", type=int, default=0,
+                    help="trace ring-buffer capacity in events "
+                         "(0 = cfg.obs_trace_capacity; oldest events drop "
+                         "once full, counted in otherData.dropped_events)")
+    ap.add_argument("--metrics-retention", type=int, default=None,
+                    help="per-step ledger rows kept in memory (None = "
+                         "cfg.metrics_retention, 0 = unbounded; evicted "
+                         "rows roll up so totals stay lifetime-exact)")
     args = ap.parse_args(argv)
+    obs = args.obs
+    if obs is None and (args.trace_out or args.metrics_out):
+        obs = True
 
     import jax
     import numpy as np
@@ -86,7 +110,9 @@ def main(argv=None):
         prefix_cache=args.prefix_cache,
         prefix_cache_blocks=args.prefix_cache_blocks,
         speculation=args.speculation, draft_len=args.draft_len,
-        draft_source=args.draft_source)
+        draft_source=args.draft_source,
+        obs=obs, trace_capacity=args.trace_capacity,
+        metrics_retention=args.metrics_retention)
     draft_model = None
     if args.draft_model:
         dcfg = registry.get_config(args.draft_model, smoke=args.smoke)
@@ -131,6 +157,26 @@ def main(argv=None):
                   f"acceptance_rate={engine.acceptance_rate():.2f} "
                   f"draft_len={engine.draft_len} "
                   f"source={engine.draft_source}")
+    if engine.obs.enabled:
+        req = engine.obs.requests.summary()
+        ttft, tpot = req["ttft"], req["tpot"]
+        print(f"ttft_s: p50={ttft['p50']:.4f} p99={ttft['p99']:.4f} "
+              f"(n={ttft['count']})  tpot_s: p50={tpot['p50']:.4f} "
+              f"p99={tpot['p99']:.4f} (n={tpot['count']})")
+        util = engine.metrics.utilization_report()
+        print(f"bw_utilization: measured="
+              f"{util['measured_bw_utilization']:.3f} predicted="
+              f"{util['predicted_bw_utilization']:.3f} "
+              f"cov={util['hbm_bytes_per_step_cov']:.3f}")
+        if args.trace_out:
+            engine.obs.write_trace(args.trace_out)
+            print(f"trace: {args.trace_out} "
+                  f"({len(engine.obs.trace)} events, "
+                  f"{engine.obs.trace.dropped} dropped)")
+        if args.metrics_out:
+            engine.obs.write_metrics(
+                args.metrics_out, extra={"ledger": engine.metrics.summary()})
+            print(f"metrics: {args.metrics_out}")
     return results
 
 

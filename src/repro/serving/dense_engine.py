@@ -29,6 +29,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.schedule import tokens_per_step_cov
 from repro.models import transformer as tf
+from repro.obs import make_telemetry
+from repro.obs.ledger import BandwidthLedger
+from repro.obs.trace import (PID_REQUESTS, PID_SERVING, TID_ENGINE,
+                             TID_LANE0, annotate_serving_tracks)
 from repro.serving.engine import ServeConfig, sample_token
 
 Pytree = Any
@@ -53,7 +57,20 @@ class DenseServingEngine:
         self._queue: list[tuple[int, np.ndarray, int]] = []
         self._results: dict[int, list[int]] = {}
         self._next_id = 0
-        self.metrics: list[dict] = []
+        # same telemetry handle + typed step ledger as the paged engine, so
+        # both engines emit the one shared schema (obs.ledger.STEP_SCHEMA)
+        obs_on = serve.obs if serve.obs is not None else cfg.obs
+        self.obs = make_telemetry(
+            obs_on,
+            trace_capacity=serve.trace_capacity or cfg.obs_trace_capacity)
+        annotate_serving_tracks(self.obs.trace, serve.slots)
+        self.metrics = BandwidthLedger(retention=(
+            serve.metrics_retention if serve.metrics_retention is not None
+            else cfg.metrics_retention))
+        self._param_bytes = cfg.active_params() * cfg.jdtype.itemsize
+        self._kv_token_bytes = 0       # measured from the first prefill's
+        #                                materialized cache (recurrent state
+        #                                amortized over max_len)
         self.trace_counts = {"prefill": 0, "decode": 0}
 
         def _prefill_one(params, tokens):
@@ -74,7 +91,20 @@ class DenseServingEngine:
         rid = self._next_id
         self._next_id += 1
         self._queue.append((rid, np.asarray(prompt, np.int32), max_new_tokens))
+        self.obs.requests.on_submit(rid)
+        if self.obs.enabled:
+            self.obs.trace.async_begin(
+                f"req {rid}", rid, pid=PID_REQUESTS,
+                args={"prompt_tokens": len(prompt),
+                      "max_new": max_new_tokens})
         return rid
+
+    def _finish(self, rid: int, tokens: "list[int]") -> None:
+        self._results[rid] = tokens
+        self.obs.requests.on_finish(rid, len(tokens))
+        if self.obs.enabled:
+            self.obs.trace.async_end(f"req {rid}", rid, pid=PID_REQUESTS,
+                                     args={"tokens": len(tokens)})
 
     def result(self, rid: int) -> list[int] | None:
         return self._results.get(rid)
@@ -97,14 +127,21 @@ class DenseServingEngine:
             if lane.request_id is not None or not self._queue:
                 continue
             rid, prompt, max_new = self._queue.pop(0)
+            t0 = self.obs.now_us() if self.obs.enabled else 0.0
             logits, caches = self._prefill(self.params, prompt[None, :])
+            if self.obs.enabled:
+                self.obs.trace.complete(
+                    "prefill", t0, self.obs.now_us() - t0, pid=PID_SERVING,
+                    tid=TID_LANE0 + i, cat="phase",
+                    args={"rid": rid, "tokens": len(prompt)})
             prefill_tokens += len(prompt)
             first = sample_token(self.serve, rid, 0, logits[0, -1])
+            self.obs.requests.on_first_token(rid)
             if max_new <= 1 or (self.serve.eos_token is not None
                                 and first == self.serve.eos_token):
                 # finished on the prefill-sampled token: never occupies a
                 # lane (matches the paged engine's _maybe_finish semantics)
-                self._results[rid] = [first]
+                self._finish(rid, [first])
                 continue
             # batch dim is 1 for stacked ("blocks") cache leaves, 0 otherwise
             def bdim(path):
@@ -117,6 +154,13 @@ class DenseServingEngine:
                     shape[d] = self.serve.slots
                     return jnp.zeros(shape, c.dtype)
                 self.caches = jax.tree_util.tree_map_with_path(pool, caches)
+                # per-token cache bytes for the ledger, measured from the
+                # one-lane prototype (length-independent recurrent state is
+                # amortized over the max_len the cache was sized for)
+                self._kv_token_bytes = sum(
+                    int(np.prod(c.shape)) * c.dtype.itemsize
+                    for c in jax.tree_util.tree_leaves(caches)
+                ) // self.serve.max_len
             # write this lane's cache slice
             def write(path, pool, c):
                 return jax.lax.dynamic_update_slice_in_dim(pool, c, i, bdim(path))
@@ -128,8 +172,39 @@ class DenseServingEngine:
             lane.tokens = [first]
         return prefill_tokens
 
+    def _record_step(self, step_t0: float, prefill_tokens: int,
+                     decode_tokens: int, read_tokens: int) -> None:
+        """One shared-schema ledger row (obs.ledger.STEP_SCHEMA — identical
+        keys to the paged engine; paged-only fields stay at the schema's
+        zero defaults: this engine never shares KV, never speculates, and
+        has no block pool).  Byte components are real, not parity zeros:
+        weights stream once per step, processed tokens write cache state,
+        reads cover each participant's visible context."""
+        tokens = prefill_tokens + decode_tokens
+        row = self.metrics.record(
+            tokens=tokens,
+            prefill_tokens=prefill_tokens,
+            # dense prefill is never padded: real == scheduled
+            prefill_real_tokens=prefill_tokens,
+            decode_tokens=decode_tokens,
+            queue_depth=len(self._queue),
+            param_bytes=self._param_bytes,
+            kv_write_bytes=tokens * self._kv_token_bytes,
+            kv_read_bytes=read_tokens * self._kv_token_bytes,
+            step_wall_us=(self.obs.now_us() - step_t0
+                          if self.obs.enabled else 0.0),
+        )
+        if self.obs.enabled:
+            self.obs.trace.complete(
+                "step", step_t0, row["step_wall_us"], pid=PID_SERVING,
+                tid=TID_ENGINE, cat="step",
+                args={"step": row["step"], "tokens": tokens,
+                      "hbm_bytes": row["hbm_bytes"]})
+
     def step(self):
         """One batched decode step across all active lanes."""
+        obs = self.obs
+        step_t0 = obs.now_us() if obs.enabled else 0.0
         prefill_tokens = self._admit()
         active = [l for l in self.lanes if l.request_id is not None]
         if not active:
@@ -138,22 +213,8 @@ class DenseServingEngine:
                 # token (max_new=1 / instant eos): still record the burst,
                 # or flatness_cov() under-reports exactly the spikes this
                 # engine is the baseline for
-                self.metrics.append({
-                    "step": len(self.metrics),
-                    "tokens": prefill_tokens,
-                    "prefill_tokens": prefill_tokens,
-                    "decode_tokens": 0,
-                    "queue_depth": len(self._queue),
-                    # schema parity with the paged engine's prefix-cache and
-                    # speculation metrics: the dense engine never shares KV
-                    # and never speculates
-                    "prefix_hit_tokens": 0,
-                    "blocks_shared": 0,
-                    "verify_tokens": 0,
-                    "drafted_tokens": 0,
-                    "accepted_tokens": 0,
-                    "acceptance_rate": 0.0,
-                })
+                self._record_step(step_t0, prefill_tokens, 0,
+                                  prefill_tokens)
                 return True
             return False
         toks = np.zeros((self.serve.slots, 1), np.int32)
@@ -171,9 +232,16 @@ class DenseServingEngine:
             if lane.request_id is not None:
                 pos_groups.setdefault(lane.pos, []).append(i)
         decode_tokens = 0
+        read_tokens = prefill_tokens   # prefill self-attends its context
         for pos, lanes_at in pos_groups.items():
+            t0 = obs.now_us() if obs.enabled else 0.0
             logits, new_caches = self._decode(
                 self.params, jnp.asarray(toks), self.caches, pos)
+            if obs.enabled:
+                obs.trace.complete(
+                    "decode", t0, obs.now_us() - t0, pid=PID_SERVING,
+                    tid=TID_ENGINE, cat="phase",
+                    args={"pos": pos, "lanes": len(lanes_at)})
             in_group = np.zeros((self.serve.slots,), bool)
             in_group[lanes_at] = True
 
@@ -193,24 +261,14 @@ class DenseServingEngine:
                 lane.pos += 1
                 lane.remaining -= 1
                 decode_tokens += 1
+                read_tokens += lane.pos
                 done = lane.remaining <= 0 or (
                     self.serve.eos_token is not None and nxt == self.serve.eos_token)
                 if done:
-                    self._results[lane.request_id] = lane.tokens
+                    self._finish(lane.request_id, lane.tokens)
                     self.lanes[i] = _Lane()
-        self.metrics.append({
-            "step": len(self.metrics),
-            "tokens": prefill_tokens + decode_tokens,
-            "prefill_tokens": prefill_tokens,
-            "decode_tokens": decode_tokens,
-            "queue_depth": len(self._queue),
-            "prefix_hit_tokens": 0,
-            "blocks_shared": 0,
-            "verify_tokens": 0,
-            "drafted_tokens": 0,
-            "accepted_tokens": 0,
-            "acceptance_rate": 0.0,
-        })
+        self._record_step(step_t0, prefill_tokens, decode_tokens,
+                          read_tokens)
         return True
 
     def run(self, max_steps: int = 10_000):

@@ -62,7 +62,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.schedule import plan_serve_chunk, round_up, tokens_per_step_cov
+from repro.kernels.gpp_matmul import matmul_lane_events
+from repro.kernels.paged_attention import paged_lane_events
 from repro.models import transformer as tf
+from repro.obs import make_telemetry
+from repro.obs.ledger import BandwidthLedger
+from repro.obs.trace import (PID_KERNEL, PID_REQUESTS, PID_SERVING,
+                             TID_ENGINE, TID_LANE0, annotate_serving_tracks)
 from repro.serving.cache import GroupedPagedCache, PagedKVCache
 from repro.serving.prefix import PrefixCache, ngram_propose
 from repro.serving.scheduler import ChunkedPrefillScheduler, Request
@@ -111,6 +117,13 @@ class ServeConfig:
     speculation: "bool | None" = None
     draft_len: int = 0
     draft_source: str = "self"
+    # observability (repro.obs): request/kernel trace spans + TTFT/TPOT
+    # histograms + per-step wall times in the ledger.  None = cfg.obs;
+    # trace_capacity 0 = cfg.obs_trace_capacity; metrics_retention None =
+    # cfg.metrics_retention (ledger rows kept; 0 = unbounded).
+    obs: "bool | None" = None
+    trace_capacity: int = 0
+    metrics_retention: "int | None" = None
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -210,11 +223,20 @@ class ServingEngine:
 
             self._draft_fwd = jax.jit(_draft_fwd)
 
+        # telemetry (repro.obs): disabled handle = one attribute check per
+        # instrumentation site; enabled = trace spans + TTFT/TPOT histograms
+        obs_on = serve.obs if serve.obs is not None else cfg.obs
+        self.obs = make_telemetry(
+            obs_on,
+            trace_capacity=serve.trace_capacity or cfg.obs_trace_capacity)
+        annotate_serving_tracks(self.obs.trace, serve.slots)
+        self._kv_lane_calls = 0
+
         self.scheduler = ChunkedPrefillScheduler(
             self.kv, slots=serve.slots, chunk=chunk, prefix=self.prefix,
             draft_len=self.draft_len,
             draft_fn=self._draft_for if self.draft_len else None,
-            token_budget=budget)
+            token_budget=budget, trace=self.obs.trace)
         specs = tf.paged_cache_specs(cfg, num_blocks, bs)
         self.caches = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype), specs)
@@ -257,7 +279,11 @@ class ServingEngine:
 
         self._results: dict[int, list[int]] = {}
         self._next_id = 0
-        self.metrics: list[dict] = []
+        # the typed step ledger IS `metrics` (list-compatible: len / iter /
+        # int+slice indexing), with optional bounded retention
+        self.metrics = BandwidthLedger(retention=(
+            serve.metrics_retention if serve.metrics_retention is not None
+            else cfg.metrics_retention))
 
     @staticmethod
     def _kv_bytes_per_token(specs) -> int:
@@ -299,6 +325,12 @@ class ServingEngine:
         self.scheduler.submit(Request(
             rid=rid, prompt=np.asarray(prompt, np.int32),
             max_new=max_new_tokens))
+        self.obs.requests.on_submit(rid)
+        if self.obs.enabled:
+            self.obs.trace.async_begin(
+                f"req {rid}", rid, pid=PID_REQUESTS,
+                args={"prompt_tokens": len(prompt),
+                      "max_new": max_new_tokens})
         return rid
 
     def result(self, rid: int) -> "list[int] | None":
@@ -317,9 +349,10 @@ class ServingEngine:
 
     def acceptance_rate(self) -> float:
         """Accepted / drafted tokens over the engine's lifetime (0.0 with
-        speculation off or nothing drafted yet)."""
-        drafted = sum(m["drafted_tokens"] for m in self.metrics)
-        accepted = sum(m["accepted_tokens"] for m in self.metrics)
+        speculation off or nothing drafted yet).  Ledger totals, so the
+        rate stays lifetime-exact under bounded metrics retention."""
+        drafted = self.metrics.total("drafted_tokens")
+        accepted = self.metrics.total("accepted_tokens")
         return accepted / drafted if drafted else 0.0
 
     # ------------------------------------------------------------ engine
@@ -431,14 +464,72 @@ class ServingEngine:
                     [req.prompt, np.asarray(req.produced[:-1], np.int32)])
                 self._prefix_insert(lane, fed)
             self._results[req.rid] = list(req.produced)
+            self.obs.requests.on_finish(req.rid, len(req.produced))
+            if self.obs.enabled:
+                self.obs.trace.async_end(
+                    f"req {req.rid}", req.rid, pid=PID_REQUESTS,
+                    args={"tokens": len(req.produced),
+                          "preemptions": req.preemptions})
             self.scheduler.finish(lane)
             if self.prefix is not None:
                 # the lane's refs just dropped: the block cap can now bite
                 self.prefix.enforce_cap()
 
+    # ------------------------------------------------------ trace helpers
+    # Modeled kernel lanes are emitted for every KV_LANE_STRIDE-th batched
+    # call, not every call: they replay a deterministic chunk schedule, so
+    # consecutive decode steps produce near-identical lanes, and emitting
+    # all of them dominates the telemetry cost (the <5% overhead budget in
+    # benchmarks/run.py:bench_serving_observability_overhead).
+    KV_LANE_STRIDE = 8
+
+    def _kv_lane_events(self, t0: float, t1: float, lanes) -> None:
+        """Modeled DMA/compute kernel lanes for one paged-attention call:
+        the chunk-issue schedule replayed over each participant's live
+        blocks, stretched into the measured call window (cat="modeled" —
+        see `kernels.paged_attention.paged_lane_events`).  Sampled every
+        KV_LANE_STRIDE-th call."""
+        self._kv_lane_calls += 1
+        if (self._kv_lane_calls - 1) % self.KV_LANE_STRIDE:
+            return
+        g0 = self.kv.groups[0]
+        counts = [len(g0.blocks_for(l)) if l in lanes else 0
+                  for l in range(self.serve.slots)]
+        paged_lane_events(
+            self.obs.trace, counts, self.kv.cfg.max_blocks_per_seq,
+            block_bytes=self.block_size * sum(self._group_token_bytes),
+            t0_us=t0, dur_us=t1 - t0, pid=PID_KERNEL)
+
+    def _trace_prefill(self, w, req, t0: float) -> None:
+        """Prefill-chunk span on the lane's track + modeled lanes for the
+        chunk's dense weight-streaming matmul (the GPP GeMM schedule)."""
+        t1 = self.obs.now_us()
+        self.obs.trace.complete(
+            "prefill_chunk", t0, t1 - t0, pid=PID_SERVING,
+            tid=TID_LANE0 + w.lane, cat="phase",
+            args={"rid": req.rid, "tokens": len(w.tokens),
+                  "real_tokens": w.real_tokens, "start_pos": w.start_pos,
+                  "final": w.final})
+        matmul_lane_events(
+            self.obs.trace, len(w.tokens), self.cfg.d_model,
+            self.cfg.d_model, itemsize=self.cfg.jdtype.itemsize,
+            t0_us=t0, dur_us=t1 - t0, pid=PID_KERNEL)
+
+    def _trace_batched(self, name: str, lanes, t0: float,
+                       tokens: int) -> None:
+        """Decode/verify span on the engine track + modeled KV-ring lanes
+        for the batched paged-attention read."""
+        t1 = self.obs.now_us()
+        self.obs.trace.complete(
+            name, t0, t1 - t0, pid=PID_SERVING, tid=TID_ENGINE, cat="phase",
+            args={"lanes": len(lanes), "tokens": tokens})
+        self._kv_lane_events(t0, t1, lanes)
+
     def step(self) -> bool:
         """One engine step: at most one prefill chunk + one batched decode
         call over every decode-phase lane."""
+        obs = self.obs
+        step_t0 = obs.now_us() if obs.enabled else 0.0
         plan = self.scheduler.schedule()
         if plan is None:
             if self.scheduler.pending:
@@ -473,11 +564,14 @@ class ServingEngine:
             # admission — assert it before every write)
             self.kv.assert_writable(w.lane, w.start_pos,
                                     w.start_pos + len(w.tokens))
+            t0 = obs.now_us() if obs.enabled else 0.0
             logits, self.caches = self._prefill(
                 self.params, self.caches,
                 jnp.asarray(w.tokens[None]),
                 self._tables_jnp(w.lane),
                 w.start_pos, w.last_idx)
+            if obs.enabled:
+                self._trace_prefill(w, req, t0)
             prefill_tokens = len(w.tokens)
             read_tokens += w.start_pos + len(w.tokens)
             attn_bytes_gather += mb_rows * self._kv_token_bytes
@@ -488,6 +582,7 @@ class ServingEngine:
             if w.final:
                 tok = self._sample(logits[0], req)
                 req.produced.append(tok)
+                obs.requests.on_first_token(req.rid)
                 # the lane's full context KV is now written: publish it for
                 # sharing while the lane keeps decoding
                 self._prefix_insert(w.lane, req.context)
@@ -507,6 +602,7 @@ class ServingEngine:
                 read_tokens += req.decode_pos + 1
                 self.kv.assert_writable(lane, req.decode_pos,
                                         req.decode_pos + 1)
+            t0 = obs.now_us() if obs.enabled else 0.0
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(toks),
                 self._tables_jnp(), jnp.asarray(positions),
@@ -514,6 +610,9 @@ class ServingEngine:
             attn_bytes_gather += slots * mb_rows * self._kv_token_bytes
             attn_bytes_stream += sum(_stream_bytes(l) for l in range(slots))
             logits_np = np.asarray(logits, np.float32)
+            if obs.enabled:
+                self._trace_batched("decode", plan.decode_lanes, t0,
+                                    len(plan.decode_lanes))
             for lane in plan.decode_lanes:
                 req = self.scheduler.request_at(lane)
                 req.decode_pos += 1
@@ -546,6 +645,7 @@ class ServingEngine:
                 # blocks were freshly ensured — assert, never mutate shares
                 self.kv.assert_writable(lane, req.decode_pos,
                                         req.decode_pos + 1 + len(draft))
+            t0 = obs.now_us() if obs.enabled else 0.0
             logits, self.caches = self._verify(
                 self.params, self.caches, jnp.asarray(toks),
                 self._tables_jnp(), jnp.asarray(positions),
@@ -553,6 +653,9 @@ class ServingEngine:
             attn_bytes_gather += slots * mb_rows * self._kv_token_bytes
             attn_bytes_stream += sum(_stream_bytes(l) for l in range(slots))
             logits_np = np.asarray(logits, np.float32)
+            if obs.enabled:
+                self._trace_batched("verify", v.lanes, t0,
+                                    int(np.sum(nvalid)))
             for lane, draft in zip(v.lanes, v.drafts):
                 req = self.scheduler.request_at(lane)
                 nd = len(draft)
@@ -586,46 +689,51 @@ class ServingEngine:
                 self._maybe_finish(lane, tok)
 
         tokens = prefill_tokens + decode_tokens + verify_tokens
-        self.metrics.append({
-            "step": len(self.metrics),
-            "tokens": tokens,
-            "prefill_tokens": prefill_tokens,
+        # one typed ledger row per step (schema: obs.ledger.STEP_SCHEMA).
+        # The ledger derives hbm_bytes = param_bytes + kv_write_bytes +
+        # kv_read_bytes — the same projection the engine used to hand-build:
+        # weights stream once per step, every processed token writes its KV,
+        # reads cover each participant's live prefix.  attn_bytes_gather is
+        # the bytes `_paged_gather` would MATERIALIZE (every participant's
+        # full MB*bs logical sequence per layer); attn_bytes_stream is what
+        # the Pallas kernel DMAs (each participant's LIVE blocks per group).
+        row = self.metrics.record(
+            tokens=tokens,
+            prefill_tokens=prefill_tokens,
             # non-pad prompt tokens in the chunk (<= prefill_tokens; the
             # padded count is the flatness/traffic quantity)
-            "prefill_real_tokens": (plan.prefill.real_tokens
-                                    if plan.prefill else 0),
-            "decode_tokens": decode_tokens,
-            # speculative decoding: fed verify tokens (1 + draft per lane),
-            # drafts proposed, drafts accepted (emitted without a fresh
-            # weight pass of their own)
-            "verify_tokens": verify_tokens,
-            "drafted_tokens": drafted_tokens,
-            "accepted_tokens": accepted_tokens,
-            "acceptance_rate": (accepted_tokens / drafted_tokens
-                                if drafted_tokens else 0.0),
-            "blocks_in_use": self.kv.blocks_in_use,
-            "free_blocks": self.kv.num_free,
-            "queue_depth": self.scheduler.queue_depth,
-            "preempted": len(plan.preempted),
-            # shared-prefix reuse: context tokens admissions served from the
-            # radix index this step (their prefill chunks never run), and
-            # how many physical blocks currently have multiple holders
-            "prefix_hit_tokens": plan.prefix_hit_tokens,
-            "blocks_shared": self.kv.blocks_shared,
-            # projection: weights stream once per step; every processed token
-            # writes its KV; reads cover each participant's live prefix
-            "hbm_bytes": (self._param_bytes
-                          + tokens * self._kv_token_bytes
-                          + read_tokens * self._kv_token_bytes),
-            # attention-read traffic this step, per read-path:
-            # gather = HBM bytes MATERIALIZED by `_paged_gather` (every
-            # participant's full MB*bs logical sequence, per layer);
-            # stream = bytes the Pallas kernel DMAs through the VMEM ring —
-            # it skips blocks outside each lane's visible range, so this is
-            # each participant's LIVE blocks per layer group
-            "attn_bytes_gather": attn_bytes_gather,
-            "attn_bytes_stream": attn_bytes_stream,
-        })
+            prefill_real_tokens=(plan.prefill.real_tokens
+                                 if plan.prefill else 0),
+            decode_tokens=decode_tokens,
+            verify_tokens=verify_tokens,
+            drafted_tokens=drafted_tokens,
+            accepted_tokens=accepted_tokens,
+            blocks_in_use=self.kv.blocks_in_use,
+            free_blocks=self.kv.num_free,
+            queue_depth=self.scheduler.queue_depth,
+            preempted=len(plan.preempted),
+            prefix_hit_tokens=plan.prefix_hit_tokens,
+            blocks_shared=self.kv.blocks_shared,
+            param_bytes=self._param_bytes,
+            kv_write_bytes=tokens * self._kv_token_bytes,
+            kv_read_bytes=read_tokens * self._kv_token_bytes,
+            # KV the radix index served this step: re-prefill bytes that
+            # never crossed HBM
+            prefix_saved_bytes=plan.prefix_hit_tokens * self._kv_token_bytes,
+            attn_bytes_gather=attn_bytes_gather,
+            attn_bytes_stream=attn_bytes_stream,
+            step_wall_us=(obs.now_us() - step_t0) if obs.enabled else 0.0,
+        )
+        if obs.enabled:
+            obs.trace.complete(
+                "step", step_t0, row["step_wall_us"], pid=PID_SERVING,
+                tid=TID_ENGINE, cat="step",
+                args={"step": row["step"], "tokens": tokens,
+                      "hbm_bytes": row["hbm_bytes"]})
+            obs.trace.counter(
+                "hbm bytes/step",
+                {"total": row["hbm_bytes"], "stream": attn_bytes_stream},
+                ts_us=step_t0, pid=PID_SERVING)
         return True
 
     def defragment(self) -> None:

@@ -48,6 +48,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.schedule import plan_verify_budget, round_up
+from repro.obs.trace import NULL_TRACE, PID_SERVING, TID_LANE0
 from repro.serving.cache import GroupedPagedCache, PagedKVCache  # noqa: F401
 
 
@@ -125,7 +126,8 @@ class ChunkedPrefillScheduler:
     DECODE = "decode"
 
     def __init__(self, cache, *, slots: int, chunk: int, prefix=None,
-                 draft_len: int = 0, draft_fn=None, token_budget: int = 0):
+                 draft_len: int = 0, draft_fn=None, token_budget: int = 0,
+                 trace=None):
         bs = cache.cfg.block_size
         if chunk < 1 or chunk % bs:
             raise ValueError(f"chunk {chunk} must be a positive multiple of "
@@ -146,6 +148,10 @@ class ChunkedPrefillScheduler:
         self.draft_len = draft_len
         self.draft_fn = draft_fn
         self.token_budget = token_budget
+        # scheduling-decision instants (admit/resume/preempt, with prefix-
+        # hit annotations) land on the owning lane's trace track; the
+        # default NULL_TRACE makes every emit a no-op
+        self.trace = trace if trace is not None else NULL_TRACE
         self.waiting: "deque[Request]" = deque()
         self.running: "dict[int, Request]" = {}     # lane -> Request
         self.phase: "dict[int, str]" = {}           # lane -> PREFILL|DECODE
@@ -240,6 +246,13 @@ class ChunkedPrefillScheduler:
             hit_tokens += req.cached_tokens
             self.running[lane] = req
             self.phase[lane] = self.PREFILL
+            if self.trace.enabled:
+                self.trace.instant(
+                    "resume" if req.preemptions else "admit",
+                    pid=PID_SERVING, tid=TID_LANE0 + lane, cat="sched",
+                    args={"rid": req.rid, "context_tokens": len(req.context),
+                          "prefix_hit_tokens": req.cached_tokens,
+                          "preemptions": req.preemptions})
         return hit_tokens
 
     def _preempt_youngest(self, than_rid: int) -> "Request | None":
@@ -263,6 +276,12 @@ class ChunkedPrefillScheduler:
         victim.cached_tokens = 0
         victim.preemptions += 1
         self.waiting.appendleft(victim)
+        if self.trace.enabled:
+            self.trace.instant(
+                "preempt", pid=PID_SERVING, tid=TID_LANE0 + lane,
+                cat="sched",
+                args={"rid": victim.rid, "for_rid": than_rid,
+                      "produced": len(victim.produced)})
         return victim
 
     def _ensure_blocks(self, req: Request, upto_pos: int,
